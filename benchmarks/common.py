@@ -1,0 +1,23 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Best-of-iters seconds, blocking."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

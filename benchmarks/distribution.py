@@ -1,0 +1,57 @@
+"""Paper §5.2 — instance distribution evenness + completion accounting.
+
+The paper reports PBS placing exactly 8 instances on each of 6 nodes, 100 %
+of the time, with 48·t datasets after t slices. Here: block (PBS-style)
+assignment evenness, the same accounting under our sweep engine, and the
+straggler-aware LPT assignment the paper's fixed scheduler lacks
+(makespan under variable-cost instances — our beyond-paper improvement).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.metrics import (
+    block_assignment,
+    distribution_evenness,
+    lpt_assignment,
+    makespan,
+)
+from repro.core.scenario import SimConfig
+from repro.core.sweep import SweepConfig, SweepRunner, completion_rate
+
+
+def run() -> None:
+    # ---- evenness of PBS-style block assignment (paper's case) ----------
+    assign = block_assignment(48, 6)
+    ev = distribution_evenness(assign, 6)
+    emit(
+        "table5.2_block_assignment", 0.0,
+        f"counts={ev['counts']} perfectly_even={ev['perfectly_even']}",
+    )
+
+    # ---- completion accounting through the real sweep engine -------------
+    cfg = SweepConfig(
+        n_instances=12, steps_per_instance=300, chunk_steps=100,
+        sim=SimConfig(n_slots=16), seed=1,
+    )
+    runner = SweepRunner(cfg)
+    t = timeit(lambda: runner.run(), warmup=0, iters=1)
+    state = runner.run()
+    emit(
+        "sec5.2_sweep_completion", t * 1e6,
+        f"completion={completion_rate(state)*100:.0f}% "
+        f"chunks={int(state.chunk)} (paper: 100%)",
+    )
+
+    # ---- straggler-aware assignment (beyond paper) ------------------------
+    rng = np.random.default_rng(0)
+    costs = rng.uniform(0.3, 1.0, size=48)  # variable-horizon instances
+    m_block = makespan(costs, block_assignment(48, 6), 6)
+    m_lpt = makespan(costs, lpt_assignment(costs, 6), 6)
+    emit(
+        "beyond_lpt_straggler_assignment", 0.0,
+        f"block_makespan={m_block:.2f} lpt_makespan={m_lpt:.2f} "
+        f"improvement={(m_block/m_lpt-1)*100:.1f}%",
+    )

@@ -1,0 +1,58 @@
+"""Kernel-layer benchmarks: tiled-flash XLA path vs naive attention, and the
+simulator physics step — the hot spots the Pallas kernels target.
+
+(Pallas interpret-mode timings are meaningless on CPU; what is measurable
+here is the *algorithmic* win of the tiled/windowed formulation, which
+carries to the TPU kernels.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.models.attention import causal_mask, flash_xla, sdpa
+
+
+def run() -> None:
+    b, s, h, d = 1, 4096, 4, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.bfloat16)
+
+    naive = jax.jit(
+        lambda q, k, v: sdpa(q, k, v, causal_mask(s, s), d**-0.5)
+    )
+    tiled = jax.jit(
+        lambda q, k, v: flash_xla(
+            q, k, v, causal=True, window=0, scale=d**-0.5,
+            tile_q=1024, tile_k=1024,
+        )
+    )
+    windowed = jax.jit(
+        lambda q, k, v: flash_xla(
+            q, k, v, causal=True, window=512, scale=d**-0.5,
+            tile_q=512, tile_k=512,
+        )
+    )
+    tn = timeit(naive, q, k, v)
+    tt = timeit(tiled, q, k, v)
+    tw = timeit(windowed, q, k, v)
+    emit("attn_naive_4k", tn * 1e6, "full-mask softmax attention")
+    emit("attn_tiled_flash_4k", tt * 1e6,
+         f"causal tile-skip speedup={tn/tt:.2f}x")
+    emit("attn_windowed_512_4k", tw * 1e6,
+         f"window-skip speedup={tn/tw:.2f}x (gemma2 local layers)")
+
+    # simulator physics step throughput (the idm kernel's target)
+    from repro.core.scenario import SimConfig, sample_scenario_params
+    from repro.core.simulator import rollout
+
+    cfg = SimConfig(n_slots=64)
+    sp = sample_scenario_params(jax.random.key(1), cfg)
+    roll = jax.jit(lambda k: rollout(k, cfg, sp, 500))
+    tr = timeit(roll, jax.random.key(2))
+    emit("sim_rollout_500steps_64veh", tr * 1e6,
+         f"{500/tr:.0f}_steps_per_s {500*64/tr:.0f}_veh_steps_per_s")

@@ -1,0 +1,57 @@
+"""§Roofline — render the dry-run artifact table (reads experiments/dryrun).
+
+Not a timing benchmark: summarizes the compiled-artifact roofline terms per
+(arch × shape × mesh) cell produced by ``repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("mesh") == mesh and "__" + mesh + ".json" in path:
+            cells.append(c)
+    return cells
+
+
+def run() -> None:
+    cells = load_cells()
+    if not cells:
+        emit("roofline_table", 0.0,
+             "no dry-run artifacts found (run python -m repro.launch.dryrun)")
+        return
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skip"]
+    worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    best = max(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    dominant = {}
+    for c in ok:
+        dominant[c["roofline"]["dominant"]] = (
+            dominant.get(c["roofline"]["dominant"], 0) + 1
+        )
+    emit(
+        "roofline_summary_16x16", 0.0,
+        f"cells_ok={len(ok)} skipped={len(skipped)} dominant={dominant} "
+        f"best={best['cell']}@{best['roofline']['roofline_fraction']:.3f} "
+        f"worst={worst['cell']}@{worst['roofline']['roofline_fraction']:.4f}",
+    )
+    for c in ok:
+        r = c["roofline"]
+        emit(
+            f"roofline[{c['cell']}]", 0.0,
+            f"dom={r['dominant']} c/m/n="
+            f"{r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+            f"{r['collective_s']:.2e}s frac={r['roofline_fraction']:.4f}",
+        )

@@ -1,0 +1,57 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Benchmarks:
+- throughput          — paper Table 5.1 / Fig 5.1 (cluster vs PC)
+- distribution        — paper §5.2 / Table 5.2 (evenness, completion, LPT)
+- parallel_vs_serial  — paper Tables 5.2/5.3 / Fig 5.2 (6×8 vs 6×1)
+- kernels             — hot-spot layers (tiled attention, simulator step)
+- roofline            — §Roofline table from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    distribution,
+    kernels_bench,
+    parallel_vs_serial,
+    roofline_bench,
+    throughput,
+)
+
+SUITES = {
+    "throughput": throughput.run,
+    "distribution": distribution.run,
+    "parallel_vs_serial": parallel_vs_serial.run,
+    "kernels": kernels_bench.run,
+    "roofline": roofline_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        try:
+            SUITES[name]()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

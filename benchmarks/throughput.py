@@ -1,0 +1,79 @@
+"""Paper Table 5.1 / Figure 5.1 — sample simulation throughput.
+
+Two layers of validation:
+1. **Schedule accounting** — reproduce the paper's exact numbers: 48·t
+   completed runs per 15-minute slice on the cluster vs a 9.73-min/run
+   personal computer, 2304 vs 74 after 12 h (31× speedup).
+2. **Measured vectorization** — on this host, one simulation instance vs a
+   48-wide vmapped batch (the per-node 8× of the paper collapses into the
+   batch axis on an accelerator): veh-steps/s and the batch-over-serial
+   speedup, plus the projected 12-hour run count for the paper's cluster.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.metrics import (
+    PAPER_CLUSTER,
+    PAPER_PC,
+    PAPER_TIMESTAMPS,
+    ClusterSpec,
+    cluster_timeline,
+    personal_timeline,
+    speedup_at,
+)
+from repro.core.scenario import SimConfig, sample_scenario_params
+from repro.core.simulator import rollout
+
+STEPS = 600
+N_BATCH = 48
+
+
+def run() -> None:
+    # ---- 1. schedule accounting vs the paper's published numbers --------
+    spec = ClusterSpec()  # 6 nodes x 8 instances, 15-min walltime
+    cluster = cluster_timeline(spec, PAPER_TIMESTAMPS)
+    pc = personal_timeline(720 / 74, PAPER_TIMESTAMPS)
+    match_cluster = cluster == PAPER_CLUSTER
+    # the paper's PC column is an empirical (slightly non-uniform) rate;
+    # the constant-rate model must track within ±3 and hit 74 at 12 h
+    track_pc = (
+        all(abs(a - b) <= 3 for a, b in zip(pc, PAPER_PC)) and pc[-1] == 74
+    )
+    speedup = speedup_at(spec, 720 / 74, 720.0)
+    emit(
+        "table5.1_schedule_accounting", 0.0,
+        f"cluster_timeline_match={match_cluster} pc_tracks±3={track_pc} "
+        f"speedup_12h={speedup:.1f}x (paper: ~31x)",
+    )
+
+    # ---- 2. measured single vs vmapped-batch throughput -----------------
+    cfg = SimConfig(n_slots=48)
+
+    def one(i):
+        k = jax.random.fold_in(jax.random.key(0), i)
+        sp = sample_scenario_params(jax.random.fold_in(k, 1), cfg)
+        return rollout(k, cfg, sp, STEPS)
+
+    single = jax.jit(lambda: one(0))
+    batched = jax.jit(lambda: jax.vmap(one)(jnp.arange(N_BATCH)))
+
+    t1 = timeit(lambda: single())
+    tn = timeit(lambda: batched())
+    per_instance_serial = t1
+    per_instance_batched = tn / N_BATCH
+    speedup = per_instance_serial / per_instance_batched
+    sim_seconds = STEPS * cfg.dt
+    emit(
+        "fig5.1_single_instance", t1 * 1e6,
+        f"sim_rate={sim_seconds/t1:.1f}x_realtime",
+    )
+    emit(
+        "fig5.1_vmapped_batch48", tn * 1e6,
+        f"per_instance={per_instance_batched*1e6:.0f}us "
+        f"vectorization_speedup={speedup:.1f}x "
+        f"runs_per_12h_this_host={int(12*3600/ (tn / N_BATCH)):,}",
+    )

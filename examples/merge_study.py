@@ -1,0 +1,55 @@
+"""Merge study: the paper's Phase-II experiment in miniature.
+
+Sweeps CAV penetration (the randomized parameter the paper's dataset was
+built to explore) and reports how merge throughput / safety respond — the
+kind of insight the paper's Phase III extracts with ML, read here directly
+from the aggregated sweep dataset.
+
+Run:  PYTHONPATH=src python examples/merge_study.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scenario import SimConfig, ScenarioParams
+from repro.core.simulator import rollout
+
+
+def run_point(p_cav: float, n_seeds: int = 4, steps: int = 900):
+    cfg = SimConfig(n_slots=48)
+    outs = []
+    for s in range(n_seeds):
+        key = jax.random.fold_in(jax.random.key(7), s)
+        sp = ScenarioParams(
+            lambda_main=jnp.array([0.35, 0.35, 0.35]),
+            lambda_ramp=jnp.asarray(0.25),
+            p_cav=jnp.asarray(p_cav),
+            v0_mean=jnp.asarray(30.0),
+            v0_ramp=jnp.asarray(21.0),
+            seed=jnp.asarray(s, jnp.uint32),
+        )
+        m = rollout(key, cfg, sp, steps)
+        outs.append(m)
+    tp = np.mean([int(m.throughput) for m in outs])
+    merges = np.mean([int(m.merges_ok) for m in outs])
+    blocked = np.mean([int(m.ramp_blocked_steps) for m in outs])
+    speed = np.mean(
+        [float(m.speed_sum) / max(float(m.speed_count), 1) for m in outs]
+    )
+    return tp, merges, blocked, speed
+
+
+def main() -> None:
+    print(f"{'p_cav':>6} {'throughput':>11} {'merges':>7} "
+          f"{'ramp_blocked':>13} {'mean_speed':>11}")
+    for p_cav in [0.0, 0.25, 0.5, 0.75, 1.0]:
+        tp, merges, blocked, speed = run_point(p_cav)
+        print(f"{p_cav:>6.2f} {tp:>11.1f} {merges:>7.1f} "
+              f"{blocked:>13.1f} {speed:>11.2f}")
+    print("\nHigher CAV share → tighter accepted gaps → more completed "
+          "merges per ramp demand (the Phase-II/III hypothesis).")
+
+
+if __name__ == "__main__":
+    main()

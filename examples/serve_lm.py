@@ -1,0 +1,57 @@
+"""Batched serving example: continuous batching over a fixed slot pool.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 2
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig, get_arch
+from repro.models import build_model
+from repro.serve import ServeEngine, greedy_generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    # simple batched greedy first
+    prompt = jax.numpy.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8))
+    )
+    out = greedy_generate(model, params, prompt, steps=8)
+    print(f"[serve_lm] greedy_generate -> {np.asarray(out).tolist()}")
+
+    # continuous batching: more requests than slots
+    eng = ServeEngine(
+        model, params, ServeConfig(max_batch=args.slots, max_seq=128)
+    )
+    rng = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    rids = [
+        eng.submit(rng.integers(0, cfg.vocab_size, size=rng.integers(3, 10)),
+                   max_new=args.max_new)
+        for _ in range(args.requests)
+    ]
+    results = eng.run()
+    dt = time.perf_counter() - t0
+    for rid in rids:
+        print(f"[serve_lm] request {rid}: {results[rid]}")
+    total_tokens = sum(len(v) for v in results.values())
+    print(f"[serve_lm] {len(results)} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on 1 CPU core)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json artifacts.
+
+Usage: PYTHONPATH=src python scripts/render_tables.py [mesh]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def main(mesh: str = "16x16") -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("mesh") != mesh:
+            continue
+        if "__" + mesh + ".json" not in os.path.basename(path):
+            continue  # skip tagged (perf-iteration) artifacts
+        rows.append(c)
+
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9)))
+
+    print(f"### Roofline table — {mesh} mesh "
+          f"(terms in seconds/step; v5e: 197 TF/s bf16, 819 GB/s HBM, "
+          f"50 GB/s ICI)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful-FLOPs | roofline-frac | bytes/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in rows:
+        if c["status"] == "skip":
+            print(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — | "
+                  f"— | SKIP: {c['reason'][:60]} |")
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        total_mem = sum(
+            mem.get(k, 0)
+            for k in ("argument_size_in_bytes", "temp_size_in_bytes",
+                      "output_size_in_bytes")
+        ) - mem.get("alias_size_in_bytes", 0)
+        note = ""
+        if c.get("train_overrides"):
+            note = f"mb={c['train_overrides']['microbatches']}"
+        print(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | {fmt_bytes(total_mem)} | "
+            f"{note} |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,8 @@
+"""repro — Webots.HPC reproduced as a JAX multi-pod simulation + training framework.
+
+The paper's contribution (a parallel, fault-tolerant simulation sweep pipeline
+feeding an ML phase) lives in :mod:`repro.core`. The ML-phase substrate (model
+zoo, distributed train/serve) lives in the sibling subpackages.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+from repro.ckpt.io import save_pytree, load_pytree, latest_step
+from repro.ckpt.manager import CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "latest_step", "CheckpointManager"]

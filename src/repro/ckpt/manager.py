@@ -1,0 +1,80 @@
+"""Checkpoint manager: step-indexed directories, retention, async writes.
+
+Writes happen on a background thread (the paper's jobs checkpoint at slice
+boundaries; training must not stall on I/O), with a barrier before the next
+write or restore so at most one write is in flight.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+
+from repro.ckpt.io import save_pytree, load_pytree, load_meta, latest_step
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str,
+        keep: int = 3,
+        async_write: bool = True,
+    ) -> None:
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, meta: dict | None = None) -> None:
+        self.wait()
+        # materialize on host *before* handing to the writer thread so the
+        # caller may donate/overwrite device buffers immediately
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        meta = dict(meta or {}, step=step)
+
+        def _write() -> None:
+            save_pytree(self._dir(step), host_tree, meta)
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def restore(
+        self, like: Any, step: int | None = None, shardings: Any = None
+    ) -> tuple[Any, dict]:
+        self.wait()
+        if step is None:
+            step = latest_step(self.root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        path = self._dir(step)
+        return load_pytree(path, like, shardings), load_meta(path)
+
+    def has_checkpoint(self) -> bool:
+        self.wait()
+        return latest_step(self.root) is not None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_", 1)[1])
+            for n in os.listdir(self.root)
+            if n.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)

@@ -1,0 +1,23 @@
+from repro.config.base import (
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    ServeConfig,
+    MeshConfig,
+    SHAPES,
+    register_arch,
+    get_arch,
+    list_archs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "ServeConfig",
+    "MeshConfig",
+    "SHAPES",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+]

@@ -1,0 +1,27 @@
+"""Assigned-architecture configs. Importing this package populates the registry."""
+
+from repro.configs import (  # noqa: F401
+    gemma2_9b,
+    gemma2_2b,
+    minicpm3_4b,
+    qwen15_05b,
+    olmoe_1b_7b,
+    deepseek_v2_236b,
+    recurrentgemma_2b,
+    whisper_large_v3,
+    qwen2_vl_2b,
+    rwkv6_3b,
+)
+
+ALL_ARCHS = [
+    "gemma2-9b",
+    "minicpm3-4b",
+    "gemma2-2b",
+    "qwen1.5-0.5b",
+    "olmoe-1b-7b",
+    "deepseek-v2-236b",
+    "recurrentgemma-2b",
+    "whisper-large-v3",
+    "qwen2-vl-2b",
+    "rwkv6-3b",
+]

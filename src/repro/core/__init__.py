@@ -1,0 +1,36 @@
+"""The paper's contribution: a parallel, fault-tolerant simulation sweep pipeline.
+
+- :mod:`repro.core.scenario`  — randomized highway-merge scenario generation
+  (the ``duarouter --randomize-flows --seed $RANDOM`` analogue).
+- :mod:`repro.core.simulator` — vectorized IDM+MOBIL merge simulator (the
+  Webots+SUMO analogue), jit-compiled chunked rollouts.
+- :mod:`repro.core.sweep`     — the PBS-job-array analogue: instance sharding
+  over the device mesh, walltime-slice chunking.
+- :mod:`repro.core.fault`     — completion bitmap, checkpoint/restart,
+  failure injection, straggler mitigation, elastic re-meshing.
+- :mod:`repro.core.aggregate` — big-data output aggregation (paper §2.10).
+- :mod:`repro.core.tokens`    — trajectory → token streams (Phase III bridge).
+- :mod:`repro.core.metrics`   — throughput/distribution accounting (paper §5).
+"""
+
+from repro.core.scenario import SimConfig, ScenarioParams, sample_scenario_params
+from repro.core.simulator import (
+    SimState,
+    SimMetrics,
+    init_state,
+    sim_step,
+    rollout_chunk,
+    rollout,
+)
+
+__all__ = [
+    "SimConfig",
+    "ScenarioParams",
+    "sample_scenario_params",
+    "SimState",
+    "SimMetrics",
+    "init_state",
+    "sim_step",
+    "rollout_chunk",
+    "rollout",
+]

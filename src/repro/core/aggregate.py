@@ -1,0 +1,78 @@
+"""Big-data output aggregation (paper §2.10).
+
+The paper's pipeline exists to aggregate thousands of per-run output datasets
+into one large dataset for ML (Phase III). Here a finished sweep's stacked
+:class:`SimMetrics` *is* that dataset; this module turns it into per-instance
+records and population summaries (the quantities the Phase-III models learn
+to predict: throughput, merge success, safety).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.simulator import SimMetrics
+from repro.core.scenario import ScenarioParams
+
+
+def metrics_to_records(
+    metrics: SimMetrics, params: ScenarioParams | None = None
+) -> list[dict[str, Any]]:
+    """Stacked [N] metrics → list of per-instance dict records."""
+    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
+    n = m.throughput.shape[0]
+    p = (
+        jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
+        if params is not None
+        else None
+    )
+    records = []
+    for i in range(n):
+        rec = {
+            "instance": i,
+            "throughput": int(m.throughput[i]),
+            "spawned": int(m.spawned[i]),
+            "mean_speed": float(
+                m.speed_sum[i] / max(float(m.speed_count[i]), 1.0)
+            ),
+            "collisions": int(m.collisions[i]),
+            "merges_ok": int(m.merges_ok[i]),
+            "ramp_blocked_steps": int(m.ramp_blocked_steps[i]),
+            "lane_changes": int(m.lane_changes[i]),
+            "min_ttc": float(m.min_ttc[i]),
+            "steps": int(m.steps[i]),
+        }
+        if p is not None:
+            rec.update(
+                lambda_main=[float(x) for x in np.atleast_1d(p.lambda_main[i])],
+                lambda_ramp=float(p.lambda_ramp[i]),
+                p_cav=float(p.p_cav[i]),
+                v0_mean=float(p.v0_mean[i]),
+            )
+        records.append(rec)
+    return records
+
+
+def aggregate_metrics(metrics: SimMetrics) -> dict[str, float]:
+    """Population summary over a sweep — the 'massive output dataset' digest."""
+    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
+    speed = m.speed_sum / np.maximum(m.speed_count, 1.0)
+    total_steps = float(m.steps.sum())
+    return {
+        "instances": int(m.throughput.shape[0]),
+        "total_throughput": int(m.throughput.sum()),
+        "total_spawned": int(m.spawned.sum()),
+        "mean_speed": float(speed.mean()),
+        "p10_speed": float(np.percentile(speed, 10)),
+        "p90_speed": float(np.percentile(speed, 90)),
+        "total_collisions": int(m.collisions.sum()),
+        "collision_rate_per_kstep": float(
+            1000.0 * m.collisions.sum() / max(total_steps, 1.0)
+        ),
+        "total_merges": int(m.merges_ok.sum()),
+        "min_ttc": float(m.min_ttc.min()),
+        "total_sim_steps": int(total_steps),
+    }

@@ -1,0 +1,124 @@
+"""Fault tolerance for sweeps: failure injection, revert, checkpoint hooks.
+
+The paper reports a 100 % simulation completion rate over 12 hours (§5.2) —
+PBS re-queues failed array elements. Here failures are *injected* (a worker's
+chunk results are discarded, as if the node died mid-slice) and the sweep loop
+re-schedules the affected instances from their last durable state; tests
+assert the completion bitmap still reaches 100 %.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core.sweep import SweepState, SweepRunner
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically kills worker shards at configured chunk indices.
+
+    ``plan`` maps chunk index → list of worker ids that fail during that
+    chunk. A failed worker loses the chunk's progress for every instance it
+    was carrying (its shard of the instance axis).
+    """
+
+    n_workers: int
+    plan: dict[int, list[int]]
+
+    def failed_workers(self, chunk: int) -> list[int]:
+        return self.plan.get(chunk, [])
+
+    def instance_mask(self, chunk: int, n_instances: int) -> np.ndarray:
+        """Boolean [N]: True where the carrying worker failed this chunk."""
+        mask = np.zeros((n_instances,), bool)
+        per = -(-n_instances // self.n_workers)  # ceil block size
+        for w in self.failed_workers(chunk):
+            mask[w * per : (w + 1) * per] = True
+        return mask
+
+    @staticmethod
+    def random(
+        n_workers: int, n_chunks: int, fail_prob: float, seed: int = 0
+    ) -> "FailureInjector":
+        rng = np.random.default_rng(seed)
+        plan: dict[int, list[int]] = {}
+        for c in range(n_chunks):
+            dead = [w for w in range(n_workers) if rng.random() < fail_prob]
+            if dead:
+                plan[c] = dead
+        return FailureInjector(n_workers, plan)
+
+
+def revert_instances(
+    state: SweepState, snapshot: SweepState, mask: np.ndarray
+) -> SweepState:
+    """Discard masked instances' progress, restoring them from ``snapshot``."""
+    m = jnp.asarray(mask)
+
+    def pick(cur, old):
+        if getattr(cur, "ndim", 0) >= 1 and cur.shape[0] == m.shape[0]:
+            bm = m.reshape((-1,) + (1,) * (cur.ndim - 1))
+            return jnp.where(bm, old, cur)
+        return cur
+
+    reverted = jax.tree.map(pick, state, snapshot)
+    # chunk counter is global, keep the current one
+    return reverted._replace(chunk=state.chunk)
+
+
+def run_with_failures(
+    runner: SweepRunner,
+    injector: FailureInjector,
+    ckpt: CheckpointManager | None = None,
+    state: SweepState | None = None,
+    max_chunks: int = 10_000,
+    on_progress: Callable[[int, float], None] | None = None,
+) -> tuple[SweepState, dict]:
+    """Full fault-tolerant run loop.
+
+    Per chunk: snapshot (durable state) → run chunk → inject failures
+    (revert the killed workers' instances to the snapshot) → checkpoint.
+    Returns the final state plus bookkeeping (chunks run, failure events,
+    completion rate — the paper's §5.2 numbers).
+    """
+    if state is None:
+        state = runner.init()
+    if ckpt is not None and ckpt.has_checkpoint():
+        state, meta = ckpt.restore(like=state)
+        state = runner._place(state)
+    events = []
+    chunks_run = 0
+    for c in range(max_chunks):
+        if bool(jax.device_get(jnp.all(state.done))):
+            break
+        snapshot = state
+        state = runner.run_chunk(state)
+        chunks_run += 1
+        dead = injector.failed_workers(c)
+        if dead:
+            mask = injector.instance_mask(c, runner.cfg.n_instances)
+            state = revert_instances(state, snapshot, mask)
+            # recompute bitmap after revert
+            state = state._replace(done=state.sim.t >= state.horizon)
+            events.append({"chunk": c, "workers": dead,
+                           "instances": int(mask.sum())})
+        if ckpt is not None:
+            ckpt.save(int(jax.device_get(state.chunk)), state)
+        if on_progress is not None:
+            done = float(jax.device_get(jnp.mean(state.done.astype(jnp.float32))))
+            on_progress(c, done)
+    completion = float(
+        jax.device_get(jnp.mean(state.done.astype(jnp.float32)))
+    )
+    return state, {
+        "chunks_run": chunks_run,
+        "failure_events": events,
+        "completion_rate": completion,
+    }

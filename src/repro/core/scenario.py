@@ -1,0 +1,104 @@
+"""Scenario generation — the ``duarouter --randomize-flows --seed $RANDOM`` analogue.
+
+The paper randomizes each simulation instance's traffic demand by re-running
+SUMO's ``duarouter`` with a fresh ``$RANDOM`` seed before every run (Appendix
+B). Here every instance's demand, driver mix and driver parameters are drawn
+from a per-instance PRNG key (``jax.random.fold_in(sweep_key, instance_id)``),
+which gives the same property — thousands of runs with meaningful deviations —
+with exact reproducibility and no shared mutable state (the TPU-native fix for
+the paper's duplicate-TraCI-port bug class).
+
+Scenario: the paper's Phase-II workload, a mixed-traffic highway merge.
+Geometry (all distances in meters, speeds in m/s)::
+
+      lane 2  ──────────────────────────────────────────▶
+      lane 1  ──────────────────────────────────────────▶
+      lane 0  ──────────────────────────────────────────▶
+      ramp(3) ════════════╗ merge zone ╔═══ (ends; must merge or stop)
+                      merge_start   merge_end
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Static (compile-time) simulator configuration."""
+
+    n_slots: int = 64          # fixed vehicle capacity per instance
+    n_lanes: int = 3           # main highway lanes (ramp is lane index n_lanes)
+    road_len: float = 1000.0
+    merge_start: float = 600.0
+    merge_end: float = 750.0
+    dt: float = 0.1            # SUMO default step length
+    vehicle_len: float = 4.5
+    spawn_gap: float = 15.0    # min headway at the spawn point
+    # IDM bounds
+    b_safe: float = 4.0        # MOBIL safety decel limit
+    b_max: float = 8.0         # emergency decel clamp
+    mobil_athr: float = 0.1    # MOBIL incentive threshold
+    lane_change_cooldown: int = 20  # steps between lane changes
+    # merge gap acceptance
+    merge_gap_front: float = 8.0
+    merge_gap_rear: float = 10.0
+    record_every: int = 0      # 0 = no trajectory recording
+
+
+class ScenarioParams(NamedTuple):
+    """Per-instance randomized demand + driver-population parameters.
+
+    Every field is a scalar (or per-lane vector) jnp array so a batch of
+    instances is just a vmapped axis.
+    """
+
+    lambda_main: jax.Array   # [n_lanes] arrival rate veh/s per main lane
+    lambda_ramp: jax.Array   # [] arrival rate on the ramp
+    p_cav: jax.Array         # [] CAV penetration (paper: mixed traffic)
+    v0_mean: jax.Array       # [] mean desired speed
+    v0_ramp: jax.Array       # [] desired speed on ramp
+    seed: jax.Array          # [] uint32 instance seed (for in-sim draws)
+
+
+def sample_scenario_params(key: jax.Array, cfg: SimConfig) -> ScenarioParams:
+    """Draw one instance's scenario. Ranges follow typical highway calibration."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    lambda_main = jax.random.uniform(
+        k1, (cfg.n_lanes,), minval=0.15, maxval=0.55
+    )
+    lambda_ramp = jax.random.uniform(k2, (), minval=0.05, maxval=0.30)
+    p_cav = jax.random.uniform(k3, (), minval=0.0, maxval=1.0)
+    v0_mean = jax.random.uniform(k4, (), minval=26.0, maxval=33.0)
+    v0_ramp = v0_mean * 0.7
+    seed = jax.random.randint(k5, (), 0, 2**31 - 1).astype(jnp.uint32)
+    return ScenarioParams(lambda_main, lambda_ramp, p_cav, v0_mean, v0_ramp, seed)
+
+
+# Driver-type parameter tables (human, CAV). CAVs run tighter headways and
+# react harder — the standard mixed-traffic assumption in the CAV-merge
+# literature the paper's Phase II targets.
+HUMAN = dict(T=1.5, a_max=1.4, b_comf=2.0, s0=2.0, politeness=0.3)
+CAV = dict(T=0.9, a_max=2.0, b_comf=2.5, s0=1.5, politeness=0.5)
+
+
+def driver_params(is_cav: jax.Array, jitter_key: jax.Array, n: int):
+    """Per-vehicle IDM/MOBIL parameters given the CAV mask, with human jitter."""
+    jt = jax.random.uniform(jitter_key, (n,), minval=0.85, maxval=1.15)
+
+    def mix(h: float, c: float) -> jax.Array:
+        base = jnp.where(is_cav, c, h)
+        # humans get parameter jitter, CAVs are standardized
+        return jnp.where(is_cav, base, base * jt)
+
+    return dict(
+        T=mix(HUMAN["T"], CAV["T"]),
+        a_max=mix(HUMAN["a_max"], CAV["a_max"]),
+        b_comf=mix(HUMAN["b_comf"], CAV["b_comf"]),
+        s0=mix(HUMAN["s0"], CAV["s0"]),
+        politeness=jnp.where(is_cav, CAV["politeness"], HUMAN["politeness"]),
+    )

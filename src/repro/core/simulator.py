@@ -1,0 +1,448 @@
+"""Vectorized mixed-traffic highway-merge simulator — the Webots+SUMO analogue.
+
+The paper runs a Webots front-end puppeteered by SUMO (§2.5.3) as its sample
+workload: a mixed-traffic highway merge. Porting that to TPU means replacing
+the process-per-instance binary simulator with a pure-JAX physics step:
+
+- **IDM** (Intelligent Driver Model, Treiber et al. 2000) longitudinal
+  car-following — what SUMO's default Krauss model approximates.
+- **MOBIL** (Kesting et al. 2007) incentive/safety lane changing.
+- **Gap-acceptance ramp merging** with CAV/human parameter mixing (Phase II).
+
+One instance = one row of a batched state pytree: ``vmap`` gives the paper's
+"n simulation instances per node" and sharding the instance axis gives "across
+n nodes" — both collapse into one SPMD program (DESIGN.md §2).
+
+Shapes are static (fixed ``n_slots`` vehicle capacity, active-masking), so the
+whole rollout jit-compiles into a single ``lax.scan``.
+
+The O(N²) masked neighbor search + IDM evaluation is the physics hot spot and
+has a Pallas TPU kernel (``repro.kernels.idm``); this module is the pure-jnp
+reference path used on CPU and for autodiff.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import (
+    SimConfig,
+    ScenarioParams,
+    driver_params,
+)
+
+INF = 1e9
+
+
+class SimState(NamedTuple):
+    pos: jax.Array        # [N] f32, meters from segment start
+    vel: jax.Array        # [N] f32, m/s
+    lane: jax.Array       # [N] i32; n_lanes == ramp lane
+    active: jax.Array     # [N] bool
+    is_cav: jax.Array     # [N] bool
+    v0: jax.Array         # [N] f32 desired speed
+    T: jax.Array          # [N] f32 headway
+    a_max: jax.Array      # [N] f32
+    b_comf: jax.Array     # [N] f32
+    s0: jax.Array         # [N] f32
+    politeness: jax.Array # [N] f32
+    cooldown: jax.Array   # [N] i32 lane-change cooldown
+    key: jax.Array        # PRNG key
+    t: jax.Array          # [] i32 step counter
+
+
+class SimMetrics(NamedTuple):
+    throughput: jax.Array      # [] i32 vehicles exited
+    spawned: jax.Array         # [] i32
+    speed_sum: jax.Array       # [] f32
+    speed_count: jax.Array     # [] f32
+    collisions: jax.Array      # [] i32
+    merges_ok: jax.Array       # [] i32
+    ramp_blocked_steps: jax.Array  # [] i32 vehicle-steps stuck at ramp end
+    lane_changes: jax.Array    # [] i32
+    min_ttc: jax.Array         # [] f32
+    steps: jax.Array           # [] i32
+
+    @staticmethod
+    def zeros() -> "SimMetrics":
+        z_i = jnp.zeros((), jnp.int32)
+        z_f = jnp.zeros((), jnp.float32)
+        return SimMetrics(z_i, z_i, z_f, z_f, z_i, z_i, z_i, z_i,
+                          jnp.asarray(INF, jnp.float32), z_i)
+
+
+def init_state(cfg: SimConfig, key: jax.Array) -> SimState:
+    """Empty world: all slots inactive."""
+    n = cfg.n_slots
+    zf = jnp.zeros((n,), jnp.float32)
+    return SimState(
+        pos=zf - INF,
+        vel=zf,
+        lane=jnp.zeros((n,), jnp.int32),
+        active=jnp.zeros((n,), bool),
+        is_cav=jnp.zeros((n,), bool),
+        v0=zf + 30.0,
+        T=zf + 1.5,
+        a_max=zf + 1.4,
+        b_comf=zf + 2.0,
+        s0=zf + 2.0,
+        politeness=zf + 0.3,
+        cooldown=jnp.zeros((n,), jnp.int32),
+        key=key,
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# physics primitives
+# --------------------------------------------------------------------------
+
+def idm_accel(v, dv, gap, v0, T, a_max, b_comf, s0):
+    """IDM acceleration. ``dv`` is the closing speed (v_self - v_lead)."""
+    gap = jnp.maximum(gap, 0.1)
+    s_star = s0 + jnp.maximum(
+        0.0, v * T + v * dv / (2.0 * jnp.sqrt(a_max * b_comf))
+    )
+    free = (v / jnp.maximum(v0, 0.1)) ** 4
+    return a_max * (1.0 - free - (s_star / gap) ** 2)
+
+
+def neighbor_info(pos, lane, active, veh_len, query_lane):
+    """Per-vehicle lead/follower in ``query_lane[i]`` (masked O(N²) search).
+
+    Returns (lead_idx, lead_gap, lead_vel_gather_ok, foll_idx, foll_gap,
+    has_foll). Gaps are bumper-to-bumper.
+    """
+    dpos = pos[None, :] - pos[:, None]                      # [i,j] = pos_j - pos_i
+    n = pos.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    pair_ok = (
+        (lane[None, :] == query_lane[:, None])
+        & active[None, :]
+        & active[:, None]
+        & ~eye
+    )
+    ahead = pair_ok & (dpos > 0.0)
+    behind = pair_ok & (dpos <= 0.0) & ~ (dpos == 0.0)      # strictly behind
+
+    lead_d = jnp.where(ahead, dpos, INF)
+    lead_idx = jnp.argmin(lead_d, axis=1)
+    lead_gap = jnp.min(lead_d, axis=1) - veh_len
+    has_lead = jnp.any(ahead, axis=1)
+
+    foll_d = jnp.where(behind, -dpos, INF)
+    foll_idx = jnp.argmin(foll_d, axis=1)
+    foll_gap = jnp.min(foll_d, axis=1) - veh_len
+    has_foll = jnp.any(behind, axis=1)
+    return lead_idx, lead_gap, has_lead, foll_idx, foll_gap, has_foll
+
+
+def _own_accel(st: SimState, cfg: SimConfig, query_lane, lead_idx, lead_gap,
+               has_lead):
+    """IDM accel of each vehicle against its lead in ``query_lane`` +
+    the ramp-end virtual wall for ramp vehicles."""
+    v_lead = jnp.where(has_lead, st.vel[lead_idx], 0.0)
+    gap = jnp.where(has_lead, lead_gap, INF)
+    dv = jnp.where(has_lead, st.vel - v_lead, 0.0)
+    a = idm_accel(st.vel, dv, gap, st.v0, st.T, st.a_max, st.b_comf, st.s0)
+
+    # ramp vehicles also brake against a virtual standing obstacle at ramp end
+    on_ramp = query_lane == cfg.n_lanes
+    wall_gap = cfg.merge_end - st.pos
+    a_wall = idm_accel(
+        st.vel, st.vel, wall_gap, st.v0, st.T, st.a_max, st.b_comf, st.s0
+    )
+    a = jnp.where(on_ramp, jnp.minimum(a, a_wall), a)
+    return jnp.clip(a, -cfg.b_max, st.a_max)
+
+
+# --------------------------------------------------------------------------
+# MOBIL lane changing (main lanes) + gap-acceptance ramp merge
+# --------------------------------------------------------------------------
+
+def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own_lead_idx,
+                     own_has_lead, cand_lane):
+    """MOBIL incentive + safety for moving every vehicle to ``cand_lane[i]``."""
+    li, lg, hl, fi, fg, hf = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, cand_lane
+    )
+    # self in target lane
+    a_new = _own_accel(st, cfg, cand_lane, li, lg, hl)
+
+    # new follower j: before = its current accel; after = following self
+    a_j_before = jnp.where(hf, a_now[fi], 0.0)
+    gap_j_after = jnp.where(hf, fg, INF)
+    a_j_after = idm_accel(
+        st.vel[fi], st.vel[fi] - st.vel, gap_j_after,
+        st.v0[fi], st.T[fi], st.a_max[fi], st.b_comf[fi], st.s0[fi],
+    )
+    a_j_after = jnp.where(hf, a_j_after, 0.0)
+
+    # old follower k: before = its current accel (following self);
+    # after = following self's current lead
+    _, _, _, ki, kg, hk = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    )
+    lead_pos = jnp.where(own_has_lead, st.pos[own_lead_idx], INF)
+    lead_vel = jnp.where(own_has_lead, st.vel[own_lead_idx], 0.0)
+    gap_k_after = lead_pos[jnp.arange(st.pos.shape[0])] - st.pos[ki] - cfg.vehicle_len
+    a_k_before = jnp.where(hk, a_now[ki], 0.0)
+    a_k_after = idm_accel(
+        st.vel[ki], st.vel[ki] - lead_vel, gap_k_after,
+        st.v0[ki], st.T[ki], st.a_max[ki], st.b_comf[ki], st.s0[ki],
+    )
+    a_k_after = jnp.where(hk, a_k_after, 0.0)
+
+    incentive = (a_new - a_now) + st.politeness * (
+        (a_j_after - a_j_before) + (a_k_after - a_k_before)
+    )
+    safe = (a_j_after >= -cfg.b_safe) & (
+        jnp.where(hf, fg, INF) > 0.0
+    ) & (jnp.where(hl, lg, INF) > 0.0)
+    return incentive, safe
+
+
+def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, lead_idx,
+                        has_lead):
+    """Simultaneous MOBIL decisions for main-lane vehicles."""
+    n = st.pos.shape[0]
+    on_main = (st.lane < cfg.n_lanes) & st.active
+    can_change = on_main & (st.cooldown == 0)
+
+    left = jnp.minimum(st.lane + 1, cfg.n_lanes - 1)
+    right = jnp.maximum(st.lane - 1, 0)
+    inc_l, safe_l = _mobil_candidate(st, cfg, a_now, lead_idx, has_lead, left)
+    inc_r, safe_r = _mobil_candidate(st, cfg, a_now, lead_idx, has_lead, right)
+    ok_l = safe_l & (inc_l > cfg.mobil_athr) & (left != st.lane) & can_change
+    ok_r = safe_r & (inc_r > cfg.mobil_athr) & (right != st.lane) & can_change
+
+    go_left = ok_l & (~ok_r | (inc_l >= inc_r))
+    go_right = ok_r & ~go_left
+    new_lane = jnp.where(go_left, left, jnp.where(go_right, right, st.lane))
+    changed = go_left | go_right
+    cooldown = jnp.where(
+        changed, cfg.lane_change_cooldown, jnp.maximum(st.cooldown - 1, 0)
+    )
+    return new_lane, cooldown, jnp.sum(changed.astype(jnp.int32))
+
+
+def _apply_ramp_merges(st: SimState, cfg: SimConfig, new_lane):
+    """Gap-acceptance merge from the ramp into lane 0 inside the merge zone."""
+    on_ramp = (st.lane == cfg.n_lanes) & st.active
+    in_zone = (st.pos >= cfg.merge_start) & (st.pos <= cfg.merge_end)
+    zeros = jnp.zeros_like(st.lane)
+    li, lg, hl, fi, fg, hf = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, zeros
+    )
+    # CAVs accept tighter gaps (cooperative merging)
+    front_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_front
+    rear_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_rear
+    gap_ok = (
+        (jnp.where(hl, lg, INF) > front_need)
+        & (jnp.where(hf, fg, INF) > rear_need)
+    )
+    merge = on_ramp & in_zone & gap_ok
+    merged_lane = jnp.where(merge, 0, new_lane)
+    return merged_lane, jnp.sum(merge.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# spawning — the demand process (per-instance randomized rates)
+# --------------------------------------------------------------------------
+
+def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
+    """Bernoulli(λ·dt) arrivals per lane; claims free slots with fresh drivers."""
+    n = st.pos.shape[0]
+    n_spawn_lanes = cfg.n_lanes + 1
+    keys = jax.random.split(key, n_spawn_lanes * 4).reshape(n_spawn_lanes, 4)
+    spawned = jnp.zeros((), jnp.int32)
+
+    pos, vel, lane, active = st.pos, st.vel, st.lane, st.active
+    is_cav, v0 = st.is_cav, st.v0
+    T, a_max, b_comf, s0, pol = st.T, st.a_max, st.b_comf, st.s0, st.politeness
+
+    for ln in range(n_spawn_lanes):
+        k_arr, k_cav, k_v, k_jit = keys[ln]
+        lam = sp.lambda_ramp if ln == cfg.n_lanes else sp.lambda_main[ln]
+        arrive = jax.random.uniform(k_arr, ()) < lam * cfg.dt
+        # headway check at the spawn point
+        in_lane = active & (lane == ln)
+        nearest = jnp.min(jnp.where(in_lane, pos, INF))
+        clear = nearest > cfg.spawn_gap
+        free = ~active
+        slot = jnp.argmax(free)
+        ok = arrive & clear & jnp.any(free)
+
+        cav = jax.random.uniform(k_cav, ()) < sp.p_cav
+        base_v0 = jnp.where(ln == cfg.n_lanes, sp.v0_ramp, sp.v0_mean)
+        new_v0 = base_v0 * jax.random.uniform(k_v, (), minval=0.9, maxval=1.1)
+        dp = driver_params(cav[None], k_jit, 1)
+
+        def put(arr, val):
+            return arr.at[slot].set(jnp.where(ok, val, arr[slot]))
+
+        init_v = jnp.minimum(new_v0, nearest / jnp.maximum(st.T[slot], 0.5))
+        pos = put(pos, 0.0)
+        vel = put(vel, jnp.maximum(init_v * 0.8, 5.0))
+        lane = put(lane, ln)
+        is_cav = put(is_cav, cav)
+        v0 = put(v0, new_v0)
+        T = put(T, dp["T"][0])
+        a_max = put(a_max, dp["a_max"][0])
+        b_comf = put(b_comf, dp["b_comf"][0])
+        s0 = put(s0, dp["s0"][0])
+        pol = put(pol, dp["politeness"][0])
+        active = active.at[slot].set(jnp.where(ok, True, active[slot]))
+        spawned = spawned + ok.astype(jnp.int32)
+
+    st = st._replace(
+        pos=pos, vel=vel, lane=lane, active=active, is_cav=is_cav,
+        v0=v0, T=T, a_max=a_max, b_comf=b_comf, s0=s0, politeness=pol,
+    )
+    return st, spawned
+
+
+# --------------------------------------------------------------------------
+# one physics step
+# --------------------------------------------------------------------------
+
+def sim_step(
+    st: SimState, cfg: SimConfig, sp: ScenarioParams
+) -> tuple[SimState, SimMetrics]:
+    """One dt step. Returns the new state and this step's metric deltas."""
+    key, k_spawn = jax.random.split(st.key)
+    st = st._replace(key=key)
+
+    # 1. neighbors + accel in current lanes
+    li, lg, hl, _, _, _ = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    )
+    a_now = _own_accel(st, cfg, st.lane, li, lg, hl)
+
+    # 2. lane changes (MOBIL) + ramp merges (gap acceptance)
+    new_lane, cooldown, n_lc = _apply_lane_changes(st, cfg, a_now, li, hl)
+    new_lane, n_merge = _apply_ramp_merges(st, cfg, new_lane)
+    st = st._replace(lane=new_lane, cooldown=cooldown)
+
+    # 3. recompute accel on post-change lanes, integrate
+    li, lg, hl, _, _, _ = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    )
+    accel = _own_accel(st, cfg, st.lane, li, lg, hl)
+    accel = jnp.where(st.active, accel, 0.0)
+    vel = jnp.maximum(st.vel + accel * cfg.dt, 0.0)
+    pos = st.pos + vel * cfg.dt
+    # ramp hard end: cannot drive past it without merging
+    on_ramp = st.lane == cfg.n_lanes
+    pos = jnp.where(on_ramp, jnp.minimum(pos, cfg.merge_end), pos)
+    vel = jnp.where(on_ramp & (pos >= cfg.merge_end), 0.0, vel)
+    st = st._replace(pos=pos, vel=vel)
+
+    # 4. collisions: follower overlapping its lead → remove follower
+    li2, lg2, hl2, _, _, _ = neighbor_info(
+        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    )
+    crashed = st.active & hl2 & (lg2 < 0.0)
+    n_crash = jnp.sum(crashed.astype(jnp.int32))
+
+    # 5. exits
+    exited = st.active & (st.pos > cfg.road_len)
+    n_out = jnp.sum(exited.astype(jnp.int32))
+    active = st.active & ~exited & ~crashed
+    st = st._replace(active=active, pos=jnp.where(active, st.pos, -INF))
+
+    # 6. TTC (closing pairs only)
+    dv = jnp.where(hl2, st.vel - st.vel[li2], 0.0)
+    ttc = jnp.where(
+        st.active & hl2 & (dv > 0.1), jnp.maximum(lg2, 0.0) / dv, INF
+    )
+    min_ttc = jnp.min(ttc)
+
+    # 7. ramp blockage gauge (vehicle-steps stopped at ramp end)
+    blocked = (
+        st.active & (st.lane == cfg.n_lanes)
+        & (st.pos > cfg.merge_end - 10.0) & (st.vel < 0.5)
+    )
+    n_blocked = jnp.sum(blocked.astype(jnp.int32))
+
+    # 8. demand
+    st, n_spawn = _spawn(st, cfg, sp, k_spawn)
+    st = st._replace(t=st.t + 1)
+
+    delta = SimMetrics(
+        throughput=n_out,
+        spawned=n_spawn,
+        speed_sum=jnp.sum(jnp.where(st.active, st.vel, 0.0)),
+        speed_count=jnp.sum(st.active.astype(jnp.float32)),
+        collisions=n_crash,
+        merges_ok=n_merge,
+        ramp_blocked_steps=n_blocked,
+        lane_changes=n_lc,
+        min_ttc=min_ttc,
+        steps=jnp.ones((), jnp.int32),
+    )
+    return st, delta
+
+
+def _acc(m: SimMetrics, d: SimMetrics) -> SimMetrics:
+    return SimMetrics(
+        throughput=m.throughput + d.throughput,
+        spawned=m.spawned + d.spawned,
+        speed_sum=m.speed_sum + d.speed_sum,
+        speed_count=m.speed_count + d.speed_count,
+        collisions=m.collisions + d.collisions,
+        merges_ok=m.merges_ok + d.merges_ok,
+        ramp_blocked_steps=m.ramp_blocked_steps + d.ramp_blocked_steps,
+        lane_changes=m.lane_changes + d.lane_changes,
+        min_ttc=jnp.minimum(m.min_ttc, d.min_ttc),
+        steps=m.steps + d.steps,
+    )
+
+
+# --------------------------------------------------------------------------
+# rollouts
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
+def rollout_chunk(
+    st: SimState,
+    metrics: SimMetrics,
+    sp: ScenarioParams,
+    horizon: jax.Array,
+    cfg: SimConfig,
+    n_steps: int,
+) -> tuple[SimState, SimMetrics]:
+    """Advance ``n_steps`` (one walltime slice). Steps past ``horizon`` no-op.
+
+    The per-instance ``horizon`` makes instances genuinely variable-cost —
+    the straggler population the sweep scheduler must handle (DESIGN.md §7).
+    """
+
+    def body(carry, _):
+        st, m = carry
+        live = st.t < horizon
+        st2, d = sim_step(st, cfg, sp)
+        st = jax.tree.map(lambda a, b: jnp.where(live, b, a), st, st2)
+        m = jax.tree.map(
+            lambda a, b: jnp.where(live, b, a), m, _acc(m, d)
+        )
+        return (st, m), None
+
+    (st, metrics), _ = jax.lax.scan(body, (st, metrics), None, length=n_steps)
+    return st, metrics
+
+
+def rollout(
+    key: jax.Array, cfg: SimConfig, sp: ScenarioParams, n_steps: int
+) -> SimMetrics:
+    """Full single-instance episode from a fresh world."""
+    st = init_state(cfg, key)
+    horizon = jnp.asarray(n_steps, jnp.int32)
+    _, metrics = rollout_chunk(
+        st, SimMetrics.zeros(), sp, horizon, cfg, n_steps
+    )
+    return metrics

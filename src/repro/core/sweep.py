@@ -1,0 +1,208 @@
+"""The PBS-job-array analogue: a sharded, chunked, restartable simulation sweep.
+
+Paper mapping (DESIGN.md §2):
+
+- ``#PBS -J 1-N`` job array            → an ``[N, ...]`` instance axis sharded
+  over every device of the mesh (`shard_map`-style data parallelism; the
+  instances are independent so the hot loop has zero collectives).
+- 15-minute walltime slices            → ``chunk_steps`` physics steps per
+  ``run_chunk`` call; sweep state is checkpointable at every chunk boundary.
+- PBS completion accounting            → a per-instance ``done`` bitmap; the
+  run loop continues until completion is 100 % (the paper's §5.2 metric),
+  surviving injected node failures (``repro.core.fault``).
+- straggler mitigation                 → instances have per-instance horizons
+  (variable cost); **compaction** re-packs unfinished instances onto all
+  devices between chunks so finished slots stop burning lockstep compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.scenario import SimConfig, ScenarioParams, sample_scenario_params
+from repro.core.simulator import (
+    SimState,
+    SimMetrics,
+    init_state,
+    rollout_chunk,
+)
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    n_instances: int = 48          # the paper's experiment: 6 nodes x 8 = 48
+    steps_per_instance: int = 9000 # 15 sim-minutes at dt=0.1
+    chunk_steps: int = 1500        # one "walltime slice"
+    sim: SimConfig = SimConfig()
+    seed: int = 0
+    vary_horizon: bool = False     # straggler population: horizons in
+    min_horizon_frac: float = 0.5  # [frac*steps, steps]
+    compaction: bool = True        # straggler mitigation (see module docstring)
+
+
+class SweepState(NamedTuple):
+    """Checkpointable sweep state. All arrays have a leading [N] axis."""
+
+    sim: SimState          # stacked per-instance simulator states
+    metrics: SimMetrics    # stacked per-instance accumulators
+    params: ScenarioParams # stacked per-instance scenario draws
+    horizon: jax.Array     # [N] i32
+    done: jax.Array        # [N] bool — the completion bitmap
+    chunk: jax.Array       # [] i32 — walltime slices executed
+
+
+def _instance_sharding(mesh: Mesh | None):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(mesh.axis_names))  # instance axis over all
+
+
+class SweepRunner:
+    """Drives a sweep to 100 % completion in walltime-slice chunks."""
+
+    def __init__(self, cfg: SweepConfig, mesh: Mesh | None = None) -> None:
+        self.cfg = cfg
+        self.mesh = mesh
+        self.sharding = _instance_sharding(mesh)
+        self._chunk_fn = jax.jit(
+            jax.vmap(
+                lambda st, m, sp, h: rollout_chunk(
+                    st, m, sp, h, cfg.sim, cfg.chunk_steps
+                )
+            ),
+        )
+
+    # ---------------- init ----------------
+
+    def init(self) -> SweepState:
+        cfg = self.cfg
+        base = jax.random.key(cfg.seed)
+
+        def init_one(i):
+            k = jax.random.fold_in(base, i)
+            sp = sample_scenario_params(jax.random.fold_in(k, 1), cfg.sim)
+            st = init_state(cfg.sim, jax.random.fold_in(k, 2))
+            if cfg.vary_horizon:
+                frac = jax.random.uniform(
+                    jax.random.fold_in(k, 3), (),
+                    minval=cfg.min_horizon_frac, maxval=1.0,
+                )
+                horizon = (frac * cfg.steps_per_instance).astype(jnp.int32)
+            else:
+                horizon = jnp.asarray(cfg.steps_per_instance, jnp.int32)
+            return st, SimMetrics.zeros(), sp, horizon
+
+        ids = jnp.arange(cfg.n_instances)
+        sim, metrics, params, horizon = jax.jit(jax.vmap(init_one))(ids)
+        state = SweepState(
+            sim=sim,
+            metrics=metrics,
+            params=params,
+            horizon=horizon,
+            done=jnp.zeros((cfg.n_instances,), bool),
+            chunk=jnp.zeros((), jnp.int32),
+        )
+        return self._place(state)
+
+    def _place(self, state: SweepState) -> SweepState:
+        if self.sharding is None:
+            return state
+        shard = self.sharding
+
+        def put(x):
+            if getattr(x, "ndim", 0) >= 1 and x.shape[0] == self.cfg.n_instances:
+                return jax.device_put(x, shard)
+            return x
+
+        return jax.tree.map(put, state)
+
+    # ---------------- one walltime slice ----------------
+
+    def run_chunk(self, state: SweepState) -> SweepState:
+        cfg = self.cfg
+        if cfg.compaction:
+            state = self._run_chunk_compacted(state)
+        else:
+            sim, metrics = self._chunk_fn(
+                state.sim, state.metrics, state.params, state.horizon
+            )
+            state = state._replace(sim=sim, metrics=metrics)
+        done = state.sim.t >= state.horizon
+        return state._replace(done=done, chunk=state.chunk + 1)
+
+    def _run_chunk_compacted(self, state: SweepState) -> SweepState:
+        """Straggler mitigation: advance only unfinished instances.
+
+        Unfinished instances are gathered into a dense prefix (padded to the
+        worker count), stepped, and scattered back. Finished instances stop
+        consuming lockstep compute — all devices keep working as long as any
+        instance remains (DESIGN.md §7).
+        """
+        done = np.asarray(jax.device_get(state.done))
+        pending = np.flatnonzero(~done)
+        if pending.size == 0:
+            return state
+        n_workers = (
+            len(self.mesh.devices.flat) if self.mesh is not None else 1
+        )
+        pad = (-pending.size) % max(n_workers, 1)
+        idx = np.concatenate([pending, pending[: 1].repeat(pad)])
+        take = jnp.asarray(idx)
+
+        sub = jax.tree.map(lambda x: x[take], (state.sim, state.metrics,
+                                               state.params, state.horizon))
+        sim, metrics = self._chunk_fn(*sub[:2], sub[2], sub[3])
+        # drop padding rows, scatter results back to logical slots
+        keep = pending.size
+        upd = jnp.asarray(pending)
+
+        def scatter(full, part):
+            return full.at[upd].set(part[:keep])
+
+        new_sim = jax.tree.map(scatter, state.sim, sim)
+        new_metrics = jax.tree.map(scatter, state.metrics, metrics)
+        return state._replace(sim=new_sim, metrics=new_metrics)
+
+    # ---------------- full run with fault handling ----------------
+
+    def run(
+        self,
+        state: SweepState | None = None,
+        max_chunks: int = 10_000,
+        on_chunk: Callable[[int, SweepState], SweepState] | None = None,
+    ) -> SweepState:
+        """Run until the completion bitmap is all-true.
+
+        ``on_chunk(chunk_idx, state) -> state`` is the fault-injection /
+        checkpoint hook: it may revert instances (simulated node failure) or
+        persist state. The loop re-schedules whatever remains incomplete —
+        completion always reaches 100 % (paper §5.2).
+        """
+        if state is None:
+            state = self.init()
+        for c in range(max_chunks):
+            if bool(jax.device_get(jnp.all(state.done))):
+                break
+            state = self.run_chunk(state)
+            if on_chunk is not None:
+                state = on_chunk(c, state)
+        return state
+
+    # ---------------- elastic re-meshing ----------------
+
+    def remesh(self, state: SweepState, mesh: Mesh | None) -> SweepState:
+        """Move a sweep onto a different mesh (elastic scale up/down)."""
+        self.mesh = mesh
+        self.sharding = _instance_sharding(mesh)
+        return self._place(state)
+
+
+def completion_rate(state: SweepState) -> float:
+    return float(jax.device_get(jnp.mean(state.done.astype(jnp.float32))))

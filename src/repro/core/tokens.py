@@ -1,0 +1,107 @@
+"""Trajectory → token streams: the Phase-III bridge.
+
+The paper's end goal is ML on the aggregated simulation dataset. The LM
+training stack in this framework consumes *token* streams, so simulation
+trajectories are serialized into a compact discrete vocabulary:
+
+    [BOS] (step frame) [SEP] (step frame) ... [EOS] [PAD]*
+
+where a step frame emits, for each tracked vehicle slot, one token encoding
+(lane, speed bucket): ``token = 4 + lane * n_buckets + bucket``. The
+vocabulary is ``4 + (n_lanes+2) * n_buckets`` (slot-inactive gets its own
+lane code). Any LM architecture in the zoo can train on these streams
+(`examples/train_lm.py` does).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import SimConfig, ScenarioParams
+from repro.core.simulator import SimState, SimMetrics, sim_step, init_state, _acc
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+SPECIAL = 4
+
+
+class Trajectory(NamedTuple):
+    lane: jax.Array   # [T, K] i32, n_lanes+1 == inactive code
+    speed: jax.Array  # [T, K] f32
+    active: jax.Array # [T, K] bool
+
+
+def vocab_size(cfg: SimConfig, n_buckets: int = 16) -> int:
+    # lanes 0..n_lanes (ramp) plus one inactive code
+    return SPECIAL + (cfg.n_lanes + 2) * n_buckets
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "n_steps", "record_every", "k_slots")
+)
+def record_rollout(
+    key: jax.Array,
+    sp: ScenarioParams,
+    cfg: SimConfig,
+    n_steps: int,
+    record_every: int = 10,
+    k_slots: int = 16,
+) -> tuple[SimMetrics, Trajectory]:
+    """Roll an episode, recording the first ``k_slots`` vehicle slots every
+    ``record_every`` steps."""
+    st = init_state(cfg, key)
+
+    def body(carry, _):
+        st, m = carry
+        st, d = sim_step(st, cfg, sp)
+        m = _acc(m, d)
+        snap = (st.lane[:k_slots], st.vel[:k_slots], st.active[:k_slots])
+        return (st, m), snap
+
+    (_, metrics), (lanes, vels, actives) = jax.lax.scan(
+        body, (st, SimMetrics.zeros()), None, length=n_steps
+    )
+    sl = slice(record_every - 1, None, record_every)
+    return metrics, Trajectory(lanes[sl], vels[sl], actives[sl])
+
+
+def trajectory_to_tokens(
+    traj: Trajectory, cfg: SimConfig, n_buckets: int = 16,
+    v_max: float = 40.0,
+) -> jax.Array:
+    """Serialize one trajectory into a 1-D token stream (see module doc)."""
+    t, k = traj.lane.shape
+    bucket = jnp.clip(
+        (traj.speed / v_max * n_buckets).astype(jnp.int32), 0, n_buckets - 1
+    )
+    lane_code = jnp.where(traj.active, traj.lane, cfg.n_lanes + 1)
+    tok = SPECIAL + lane_code * n_buckets + bucket           # [T, K]
+    frames = jnp.concatenate(
+        [tok, jnp.full((t, 1), SEP, tok.dtype)], axis=1
+    ).reshape(-1)
+    return jnp.concatenate(
+        [jnp.array([BOS], tok.dtype), frames, jnp.array([EOS], tok.dtype)]
+    )
+
+
+def sweep_token_dataset(
+    keys: jax.Array,
+    params: ScenarioParams,
+    cfg: SimConfig,
+    n_steps: int = 600,
+    record_every: int = 10,
+    k_slots: int = 16,
+    n_buckets: int = 16,
+) -> jax.Array:
+    """Batched: [n_instances] keys + stacked params → [n, stream_len] tokens."""
+
+    def one(key, sp):
+        _, traj = record_rollout(
+            key, sp, cfg, n_steps, record_every, k_slots
+        )
+        return trajectory_to_tokens(traj, cfg, n_buckets)
+
+    return jax.vmap(one)(keys, params)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import synthetic_batches
+from repro.data.sim_dataset import sim_token_batches
+
+__all__ = ["synthetic_batches", "sim_token_batches"]

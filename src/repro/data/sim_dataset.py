@@ -1,0 +1,83 @@
+"""Phase-III data: LM training batches drawn from simulation sweeps.
+
+This is the paper's whole point — the aggregated output dataset of thousands
+of randomized simulation runs becomes ML training data. Token streams come
+from ``repro.core.tokens``; this module packs them into fixed-shape
+next-token-prediction batches.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.scenario import SimConfig, sample_scenario_params
+from repro.core.tokens import sweep_token_dataset, vocab_size, PAD
+
+
+def sim_token_corpus(
+    sim: SimConfig,
+    n_instances: int,
+    seed: int = 0,
+    n_steps: int = 400,
+    record_every: int = 10,
+    k_slots: int = 8,
+) -> np.ndarray:
+    """Run a small sweep and concatenate every instance's token stream."""
+    keys = jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.key(seed), i)
+    )(jnp.arange(n_instances))
+    params = jax.vmap(lambda k: sample_scenario_params(k, sim))(keys)
+    streams = sweep_token_dataset(
+        keys, params, sim, n_steps=n_steps, record_every=record_every,
+        k_slots=k_slots,
+    )
+    return np.asarray(jax.device_get(streams)).reshape(-1)
+
+
+def sim_token_batches(
+    cfg: ModelConfig,
+    sim: SimConfig,
+    batch: int,
+    seq: int,
+    n_instances: int = 8,
+    seed: int = 0,
+    start_step: int = 0,
+) -> Iterator[dict]:
+    """Fixed-shape batches over the sim corpus (wrap-around epochs).
+
+    The model's vocab must be ≥ the sim token vocabulary
+    (``repro.core.tokens.vocab_size``).
+    """
+    corpus = sim_token_corpus(sim, n_instances, seed)
+    assert cfg.vocab_size >= vocab_size(sim), (
+        f"model vocab {cfg.vocab_size} < sim vocab {vocab_size(sim)}"
+    )
+    span = batch * (seq + 1)
+    n = corpus.shape[0]
+    step = start_step
+    while True:
+        off = (step * span) % max(n - span, 1)
+        window = corpus[off : off + span]
+        if window.shape[0] < span:
+            window = np.pad(window, (0, span - window.shape[0]),
+                            constant_values=PAD)
+        arr = jnp.asarray(window.reshape(batch, seq + 1).astype(np.int32))
+        out = {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+        if cfg.is_encdec:
+            # audio-stub frames: the sim stream conditions the decoder only
+            out["frames"] = jax.random.normal(
+                jax.random.fold_in(jax.random.key(seed), step),
+                (batch, cfg.enc_ctx, cfg.d_model), jnp.dtype(cfg.dtype),
+            )
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+            out["mrope_pos"] = jnp.broadcast_to(
+                pos[None], (3, batch, seq)
+            ).astype(jnp.int32)
+        yield out
+        step += 1

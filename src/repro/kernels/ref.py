@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def ref_attention(
+    q: jax.Array,            # [B, Sq, H, D]
+    k: jax.Array,            # [B, Sk, K, D]
+    v: jax.Array,            # [B, Sk, K, D]
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = d**-0.5 if scale is None else scale
+    qg = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    sk = k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(b, sq, h, d)
+
+
+def ref_rglru(
+    a: jax.Array,    # [B, S, W] per-step decay in (0,1], f32
+    x: jax.Array,    # [B, S, W] gated inputs
+    h0: jax.Array,   # [B, W] initial state
+) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + x_t. Returns (ys [B,S,W], h_final [B,W])."""
+
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    af = a.astype(jnp.float32).swapaxes(0, 1)
+    xf = x.astype(jnp.float32).swapaxes(0, 1)
+    hf, ys = jax.lax.scan(step, h0.astype(jnp.float32), (af, xf))
+    return ys.swapaxes(0, 1), hf
+
+
+def ref_wkv6(
+    r: jax.Array,    # [B, S, H, K]
+    k: jax.Array,    # [B, S, H, K]
+    v: jax.Array,    # [B, S, H, V]
+    w: jax.Array,    # [B, S, H, K] per-step decay in (0,1)
+    u: jax.Array,    # [H, K] bonus
+    s0: jax.Array,   # [B, H, K, V] initial state
+) -> tuple[jax.Array, jax.Array]:
+    """y_t = rᵗ(S + u⊙k vᵀ); S ← w⊙S + k vᵀ. Returns (y, S_final)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    seq = tuple(
+        z.swapaxes(0, 1).astype(jnp.float32) for z in (r, k, v, w)
+    )
+    S, ys = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return ys.swapaxes(0, 1), S
+
+
+def ref_idm_accel(
+    pos: jax.Array,     # [N]
+    vel: jax.Array,     # [N]
+    lane: jax.Array,    # [N] i32
+    active: jax.Array,  # [N] bool
+    v0: jax.Array, T: jax.Array, a_max: jax.Array,
+    b_comf: jax.Array, s0: jax.Array,
+    veh_len: float,
+) -> jax.Array:
+    """Same-lane lead search + IDM acceleration (simulator hot spot)."""
+    INF = 1e9
+    n = pos.shape[0]
+    dpos = pos[None, :] - pos[:, None]
+    eye = jnp.eye(n, dtype=bool)
+    ahead = (
+        (lane[None, :] == lane[:, None])
+        & active[None, :] & active[:, None] & ~eye & (dpos > 0)
+    )
+    lead_d = jnp.where(ahead, dpos, INF)
+    lead_idx = jnp.argmin(lead_d, axis=1)
+    has_lead = jnp.any(ahead, axis=1)
+    gap = jnp.where(has_lead, jnp.min(lead_d, axis=1) - veh_len, INF)
+    v_lead = jnp.where(has_lead, vel[lead_idx], 0.0)
+    dv = jnp.where(has_lead, vel - v_lead, 0.0)
+
+    gap = jnp.maximum(gap, 0.1)
+    s_star = s0 + jnp.maximum(
+        0.0, vel * T + vel * dv / (2.0 * jnp.sqrt(a_max * b_comf))
+    )
+    return a_max * (
+        1.0 - (vel / jnp.maximum(v0, 0.1)) ** 4 - (s_star / gap) ** 2
+    )

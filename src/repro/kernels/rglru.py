@@ -1,0 +1,93 @@
+"""RG-LRU linear recurrence (TPU Pallas): h_t = a_t ⊙ h_{t-1} + x_t.
+
+Grid: ``(B, nW, nS)`` — width is tiled over the VPU lanes (BW = 128·k), the
+sequence axis is the minor grid dim so the carried state ``h`` lives in VMEM
+scratch across sequence tiles. Each step processes a ``[BS, BW]`` tile with
+an in-VMEM ``fori_loop`` over BS (the recurrence is inherently sequential in
+time, but all BW lanes advance in parallel — exactly the VPU shape).
+
+Inputs are the *precomputed* per-step decays and gated inputs (the gate
+matmuls upstream are MXU work XLA already handles well); this kernel covers
+the part XLA does badly: the length-S sequential chain, fused in VMEM instead
+of S round-trips to HBM. Also emits the final state (chunked prefill /
+decode handoff).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(
+    a_ref, x_ref, h0_ref,      # [1, BS, BW], [1, BS, BW], [1, BW]
+    y_ref, hout_ref,           # [1, BS, BW], [1, BW]
+    h_ref,                     # scratch [1, BW] f32
+    *,
+    bs: int,
+):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # [BS, BW]
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + x[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, h_ref[0])
+    h_ref[0] = h
+
+    @pl.when(isq == pl.num_programs(2) - 1)
+    def _finish():
+        hout_ref[...] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "block_w", "interpret")
+)
+def rglru_linear_scan(
+    a: jax.Array,    # [B, S, W] decay per step
+    x: jax.Array,    # [B, S, W] gated inputs
+    h0: jax.Array,   # [B, W] initial state
+    *,
+    block_s: int = 256,
+    block_w: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (ys [B,S,W] in x.dtype, h_final [B,W] f32)."""
+    b, s, w = x.shape
+    bs = min(block_s, s)
+    bw = min(block_w, w)
+    assert s % bs == 0 and w % bw == 0, (s, bs, w, bw)
+
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    ys, hf = pl.pallas_call(
+        kernel,
+        grid=(b, w // bw, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b, iw, isq: (b, isq, iw)),
+            pl.BlockSpec((1, bs, bw), lambda b, iw, isq: (b, isq, iw)),
+            pl.BlockSpec((1, bw), lambda b, iw, isq: (b, iw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b, iw, isq: (b, isq, iw)),
+            pl.BlockSpec((1, bw), lambda b, iw, isq: (b, iw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, w), x.dtype),
+            jax.ShapeDtypeStruct((b, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0)
+    return ys, hf

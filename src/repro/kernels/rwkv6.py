@@ -1,0 +1,101 @@
+"""WKV6 recurrence (TPU Pallas): y_t = rᵗ(S + u⊙k vᵀ);  S ← w_t⊙S + k vᵀ.
+
+Grid: ``(B, H, nS)`` with the sequence axis minor; the per-(batch,head) state
+``S ∈ R^{K×V}`` (64×64 f32 = 16 KB) persists in VMEM scratch across sequence
+tiles. Within a tile the recurrence steps sequentially (data-dependent decay
+``w_t`` forbids a pure matmul form), but each step is a rank-1 update + a
+matvec over the full K×V state — VPU-shaped work on resident data. The win
+over XLA's lax.scan is locality: S never round-trips to HBM.
+
+(The chunkwise-parallel formulation — intra-chunk attention + inter-chunk
+state like FLA's — is the next optimization rung; noted in EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref,   # [1, BS, 1, K|V]
+    u_ref,                        # [1, K]
+    s0_ref,                       # [1, 1, K, V]
+    y_ref,                        # [1, BS, 1, V]
+    sout_ref,                     # [1, 1, K, V]
+    s_ref,                        # scratch [K, V] f32
+    *,
+    bs: int,
+):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # [BS, K]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)   # [BS, K]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)   # [BS, V]
+    w = w_ref[0, :, 0, :].astype(jnp.float32)   # [BS, K]
+    u = u_ref[0].astype(jnp.float32)            # [K]
+
+    def step(t, S):
+        kv = k[t][:, None] * v[t][None, :]      # [K, V] rank-1
+        y = ((S + u[:, None] * kv) * r[t][:, None]).sum(axis=0)  # [V]
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        return w[t][:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, bs, step, s_ref[...])
+    s_ref[...] = S
+
+    @pl.when(isq == pl.num_programs(2) - 1)
+    def _finish():
+        sout_ref[0, 0] = s_ref[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def wkv6(
+    r: jax.Array,    # [B, S, H, K]
+    k: jax.Array,    # [B, S, H, K]
+    v: jax.Array,    # [B, S, H, V]
+    w: jax.Array,    # [B, S, H, K]
+    u: jax.Array,    # [H, K]
+    s0: jax.Array,   # [B, H, K, V]
+    *,
+    block_s: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,V] in v.dtype, S_final [B,H,K,V] f32)."""
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+
+    kernel = functools.partial(_wkv6_kernel, bs=bs)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, 1, kk), lambda b, h, isq: (b, isq, h, 0)),
+            pl.BlockSpec((1, bs, 1, kk), lambda b, h, isq: (b, isq, h, 0)),
+            pl.BlockSpec((1, bs, 1, vv), lambda b, h, isq: (b, isq, h, 0)),
+            pl.BlockSpec((1, bs, 1, kk), lambda b, h, isq: (b, isq, h, 0)),
+            pl.BlockSpec((1, kk), lambda b, h, isq: (h, 0)),
+            pl.BlockSpec((1, 1, kk, vv), lambda b, h, isq: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, 1, vv), lambda b, h, isq: (b, isq, h, 0)),
+            pl.BlockSpec((1, 1, kk, vv), lambda b, h, isq: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, vv), v.dtype),
+            jax.ShapeDtypeStruct((b, h, kk, vv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sf

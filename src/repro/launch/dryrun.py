@@ -1,0 +1,298 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE FIRST TWO LINES set the 512-placeholder-device flag — before ANY other
+import, since jax locks the device count on first init. Do not import this
+module from test/bench code (it would flip their device world); it is a
+__main__ entry point.
+
+Per cell: build the production mesh, lower the cell's step function with
+explicit in/out shardings, ``.compile()``, then record
+``memory_analysis()`` / ``cost_analysis()`` / collective wire bytes and the
+derived roofline terms into ``experiments/dryrun/*.json`` (EXPERIMENTS.md
+§Dry-run and §Roofline read from these artifacts).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    python -m repro.launch.dryrun --all                  # every cell
+    python -m repro.launch.dryrun --all --multi-pod      # 2x16x16 mesh
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config import SHAPES, TrainConfig, get_arch       # noqa: E402
+from repro.configs import ALL_ARCHS                          # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.specs import (                             # noqa: E402
+    cell_is_applicable,
+    input_specs,
+)
+from repro.launch.costing import extrapolated_costs         # noqa: E402
+from repro.launch.roofline import (                          # noqa: E402
+    roofline_report,
+    model_flops,
+)
+from repro.models import build_model                         # noqa: E402
+from repro.sharding import (                                 # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.train.step import abstract_train_state, make_train_step  # noqa: E402
+from repro.utils.hlo import collective_bytes                 # noqa: E402
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+
+# per-arch training knobs used for the big cells (memory-driven; fitting
+# iteration documented in EXPERIMENTS.md §Dry-run). max microbatches is
+# bounded by global_batch/dp_size = 256/16 = 16 (one row per data shard).
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "deepseek-v2-236b": {"microbatches": 16, "remat": "full"},
+    "gemma2-9b": {"microbatches": 4, "remat": "full"},
+    "minicpm3-4b": {"microbatches": 16, "remat": "full"},
+    "whisper-large-v3": {"microbatches": 16, "remat": "full"},
+    "qwen2-vl-2b": {"microbatches": 4, "remat": "full"},
+    "gemma2-2b": {"microbatches": 4, "remat": "full"},
+    "recurrentgemma-2b": {"microbatches": 4, "remat": "full"},
+    "rwkv6-3b": {"microbatches": 4, "remat": "full"},
+    "olmoe-1b-7b": {"microbatches": 2, "remat": "full"},
+    "qwen1.5-0.5b": {"microbatches": 2, "remat": "full"},
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, tc_overrides=None):
+    """Returns (jitted_fn, example_args_abstract) for one cell."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        over = dict(TRAIN_OVERRIDES.get(arch, {}))
+        over.update(tc_overrides or {})
+        tc = TrainConfig(remat="full", **over) if "remat" not in over else \
+            TrainConfig(**over)
+        params, opt_state = abstract_train_state(model, tc)
+        p_sh = param_shardings(cfg, params, mesh)
+        o_sh = opt_state_shardings(cfg, opt_state, params, mesh)
+        b_sh = batch_shardings(mesh, specs)
+        step = make_train_step(model, tc)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params, opt_state, specs), tc
+
+    params = model.abstract_params()
+    p_sh = param_shardings(cfg, params, mesh)
+
+    if shape.kind == "prefill":
+        cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(mesh, cache, shape.global_batch)
+        b_sh = batch_shardings(mesh, specs)
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(p_sh, c_sh, b_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        return fn, (params, cache, specs), None
+
+    # decode
+    cache = specs["cache"]
+    c_sh = cache_shardings(mesh, cache, shape.global_batch)
+    tok_sh = batch_shardings(mesh, {"t": specs["tokens"]})["t"]
+    pos_sh = batch_shardings(mesh, {"t": specs["pos"]})["t"]
+    fn = jax.jit(
+        model.decode,
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    return fn, (params, cache, specs["tokens"], specs["pos"]), None
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, save: bool = True,
+    tc_overrides=None, tag: str = "",
+) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    ok, why = cell_is_applicable(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "cell": cell_id, "status": "skip", "reason": why,
+    }
+    if not ok:
+        print(f"[dryrun] SKIP {cell_id}: {why}")
+        if save:
+            _save(cell_id, result)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    fn, args, tc = build_cell(arch, shape_name, mesh, tc_overrides)
+    from repro.sharding.ctx import activation_sharding
+
+    with mesh, activation_sharding(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    mem_info = {}
+    if mem is not None:
+        for field in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(mem, field):
+                mem_info[field] = int(getattr(mem, field))
+
+    # official (scanned) compile: memory + artifact. Cost totals come from the
+    # trip-count-honest extrapolation coster (scan bodies are counted once by
+    # HLO cost analysis — see launch/costing.py).
+    raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    shape_cfg = SHAPES[shape_name]
+    if multi_pod:
+        # §Roofline is single-pod; multi-pod cells prove the 'pod' axis
+        # shards (lower+compile+memory) without the costing pass
+        ext = {
+            "flops_per_device": raw_flops,
+            "bytes_per_device": raw_bytes,
+            "wire_bytes_per_device": coll.total_wire_bytes,
+            "method": "scanned-hlo-raw(no-trip-count-correction)",
+        }
+    else:
+        ext = extrapolated_costs(cfg, shape_cfg, mesh, tc)
+    flops = ext["flops_per_device"]
+    bytes_accessed = ext["bytes_per_device"]
+    wire = ext["wire_bytes_per_device"]
+
+    mf = model_flops(cfg, shape)
+    report = roofline_report(
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=wire,
+        n_devices=n_dev,
+        model_flops_global=mf,
+    )
+
+    result.update(
+        status="ok",
+        n_devices=int(n_dev),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem_info,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=wire,
+        cost_method=ext["method"],
+        raw_scanned_flops_per_device=raw_flops,
+        raw_scanned_bytes_per_device=raw_bytes,
+        collectives_scanned_hlo={
+            "counts": coll.counts,
+            "wire_bytes": coll.wire_bytes,
+            "total_wire_bytes": coll.total_wire_bytes,
+        },
+        model_flops_global=mf,
+        roofline=report,
+        train_overrides=(
+            {"microbatches": tc.microbatches, "remat": tc.remat}
+            if tc is not None else None
+        ),
+    )
+    print(
+        f"[dryrun] OK {cell_id}: compile={t_compile:.1f}s "
+        f"flops/dev={flops:.3e} bytes/dev={bytes_accessed:.3e} "
+        f"wire/dev={wire:.3e} "
+        f"dominant={report['dominant']} "
+        f"terms(c/m/n)={report['compute_s']:.2e}/{report['memory_s']:.2e}/"
+        f"{report['collective_s']:.2e}s "
+        f"roofline_frac={report['roofline_fraction']:.3f}"
+    )
+    if mem_info:
+        print(f"[dryrun]    memory_analysis: {mem_info}")
+    if save:
+        _save(cell_id, result)
+    return result
+
+
+def _save(cell_id: str, result: dict) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, cell_id + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.microbatches is not None:
+        overrides["microbatches"] = args.microbatches
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp,
+                             tc_overrides=overrides or None, tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch}/{shape}/mp={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Roofline math (TPU v5e constants) — EXPERIMENTS.md §Roofline.
+
+Terms (all in seconds, per device; HLO numbers come from the partitioned
+per-device module so no further division by chip count is needed):
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 peak per chip)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = wire_bytes_per_device / 50e9         (per-link ICI)
+
+``MODEL_FLOPS`` uses 6·N·D (train) / 2·N·D (inference) with N = active
+params for MoE; the ratio MODEL_FLOPS / (HLO_FLOPs × chips) shows how much
+compiled compute is "useful" (catches remat/redundancy waste — with full
+remat the theoretical ceiling is 0.75 for training).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.config.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def roofline_report(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+    n_devices: int,
+    model_flops_global: float,
+) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    total_hlo_flops = flops_per_device * n_devices
+    useful = (
+        model_flops_global / total_hlo_flops if total_hlo_flops > 0 else 0.0
+    )
+    bound = max(compute_s, memory_s, collective_s)
+    # fraction of roofline: useful-model-compute time over the dominant term
+    model_compute_s = (
+        model_flops_global / n_devices / PEAK_FLOPS if n_devices else 0.0
+    )
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "model_compute_s_per_device": model_compute_s,
+        "roofline_fraction": (model_compute_s / bound) if bound > 0 else 0.0,
+        "arithmetic_intensity": (
+            flops_per_device / bytes_per_device if bytes_per_device else 0.0
+        ),
+    }
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS
+# --------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig) -> dict[str, float]:
+    """Analytic total + active param counts (embeddings excluded from the
+    6·N·D convention; MoE active = shared + top_k experts)."""
+    d = cfg.d_model
+    n_attn_per_layer = 0.0
+    if cfg.use_mla:
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        h = cfg.n_heads
+        q = (
+            d * cfg.q_lora_rank + cfg.q_lora_rank * h * (dn + dr)
+            if cfg.q_lora_rank
+            else d * h * (dn + dr)
+        )
+        kv = d * (cfg.kv_lora_rank + dr) + cfg.kv_lora_rank * h * (dn + dv)
+        o = h * dv * d
+        n_attn_per_layer = q + kv + o
+    else:
+        n_attn_per_layer = (
+            d * cfg.n_heads * cfg.head_dim * 2
+            + d * cfg.n_kv_heads * cfg.head_dim * 2
+        )
+
+    def ffn_params(m):
+        return 3 * d * m
+
+    n_layers = cfg.n_layers
+    total = 0.0
+    active = 0.0
+    for i in range(n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "recurrent":
+            w = cfg.lru_width
+            hd = w // cfg.n_heads
+            mix = 2 * d * w + cfg.conv_width * w + 2 * cfg.n_heads * hd * hd \
+                + w * d
+            total += mix
+            active += mix
+        elif kind == "rwkv":
+            mix = 4 * d * d + d * d + 2 * d * 64  # r,k,v,g,o + decay lora
+            cm = 2 * d * cfg.d_ff + d * d
+            total += mix + cm
+            active += mix + cm
+            continue  # rwkv blocks carry their own ffn (channel mix)
+        else:
+            total += n_attn_per_layer
+            active += n_attn_per_layer
+        # FFN / MoE
+        if cfg.n_experts > 0 and i >= cfg.first_dense_layers:
+            e_p = ffn_params(cfg.moe_d_ff)
+            total += cfg.n_experts * e_p + d * cfg.n_experts
+            active += (cfg.top_k + cfg.n_shared_experts) * e_p
+        elif kind != "rwkv":
+            m = cfg.dense_d_ff if (
+                cfg.n_experts > 0 and i < cfg.first_dense_layers
+            ) else cfg.d_ff
+            total += ffn_params(m)
+            active += ffn_params(m)
+    if cfg.is_encdec:
+        enc = cfg.n_enc_layers * (n_attn_per_layer + ffn_params(cfg.d_ff))
+        cross = cfg.n_layers * n_attn_per_layer
+        total += enc + cross
+        active += enc + cross
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return {
+        "total": total, "active": active, "embedding": emb,
+        "total_with_emb": total + emb,
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (train) or 2·N·D (prefill/decode), N = active non-emb params."""
+    n = param_counts(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

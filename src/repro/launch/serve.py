@@ -1,0 +1,47 @@
+"""Serving launcher: batched request serving with continuous batching.
+
+``python -m repro.launch.serve --arch <id> --requests 8``
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig, get_arch
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    eng = ServeEngine(
+        model, params,
+        ServeConfig(max_batch=args.slots, max_seq=args.max_seq),
+    )
+    rng = np.random.default_rng(args.seed)
+    rids = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 16))
+        rids.append(eng.submit(prompt, max_new=args.max_new))
+    results = eng.run()
+    for rid in rids:
+        print(f"[serve] request {rid}: {results[rid]}")
+    print(f"[serve] completed {len(results)}/{args.requests} requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns the abstract inputs of the function the
+cell lowers — ``train_step`` for training shapes, ``prefill`` for
+inference-prefill, ``serve_step`` (one token against a seq_len cache) for
+decode shapes. No device allocation anywhere (weak-type-correct, shardable).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models.registry import Model
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), I32),
+        "labels": _sds((b, s), I32),
+    }
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.mrope_sections:
+        batch["mrope_pos"] = _sds((3, b, s), I32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), I32)}
+    if cfg.is_encdec:
+        # encoder consumes the seq_len frames; decoder starts from a prompt
+        batch["frames"] = _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["tokens"] = _sds((b, min(s, 448)), I32)
+    if cfg.mrope_sections:
+        batch["mrope_pos"] = _sds((3, b, s), I32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs of serve_step: one new token against a seq_len-deep cache."""
+    model = Model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "cache": model.abstract_cache(b, s),
+        "tokens": _sds((b,), I32),
+        "pos": _sds((b,), I32),
+    }
+    if cfg.mrope_sections:
+        out["mrope_pos"] = _sds((3, b, 1), I32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k runs only for sub-quadratic archs (assignment skip rule)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "full-attention KV at 512k context — skipped per assignment "
+            "(run for SSM/hybrid/linear-attn only); see DESIGN.md §5"
+        )
+    return True, ""

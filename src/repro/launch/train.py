@@ -1,0 +1,76 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real (small-scale, CPU-friendly by default) training job with the
+full production stack: jitted train step, checkpointing, restart, sim-token
+or synthetic data. On a TPU cluster the same entry point takes
+``--production-mesh`` and shards per repro.sharding.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import TrainConfig, get_arch
+from repro.core.scenario import SimConfig
+from repro.data import sim_token_batches, synthetic_batches
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-size", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--data", choices=["sim", "synthetic"], default="sim")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override reduced d_model (e.g. ~100M params)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        over = {}
+        if args.d_model:
+            over = dict(
+                d_model=args.d_model, n_heads=max(args.d_model // 64, 1),
+                n_kv_heads=max(args.d_model // 64, 1), head_dim=64,
+                d_ff=args.d_model * 4, lru_width=args.d_model,
+                vocab_size=2048,
+            )
+        if args.n_layers:
+            pat = len(cfg.layer_pattern)
+            over["n_layers"] = (args.n_layers // pat) * pat or pat
+        cfg = cfg.reduced(**over)
+    model = build_model(cfg)
+
+    tc = TrainConfig(
+        learning_rate=args.lr,
+        warmup_steps=max(args.steps // 20, 1),
+        total_steps=args.steps,
+        microbatches=args.microbatches,
+        remat=args.remat,
+    )
+    if args.data == "sim":
+        data = sim_token_batches(
+            cfg, SimConfig(n_slots=32), batch=args.batch, seq=args.seq
+        )
+    else:
+        data = synthetic_batches(cfg, batch=args.batch, seq=args.seq)
+
+    print(f"[train] arch={cfg.name} devices={jax.devices()}")
+    trainer = Trainer(model, tc, data, ckpt_dir=args.ckpt_dir)
+    trainer.run(steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

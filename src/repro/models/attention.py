@@ -1,0 +1,524 @@
+"""Attention: GQA with RoPE/M-RoPE, sliding windows, logit softcaps; MLA;
+KV caches (ring-buffered for windowed layers); absorbed-MLA decode.
+
+Layouts: activations ``[B, S, D]``; per-head tensors ``[B, S, H, hd]``;
+KV caches ``[B, S_cache, K, hd]`` with an entry-position array ``[B, S_cache]``
+(−1 = empty). Windowed ("local") layers allocate ``S_cache == window`` and
+write decode entries at ``pos % window`` — O(window) memory at any context
+length, which is what makes gemma2's local layers and recurrentgemma
+long-context-viable.
+
+The pure-jnp paths here are the autodiff/dry-run reference; the Pallas flash
+kernel (``repro.kernels.flash_attention``) is the TPU execution path and is
+verified against these in tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.common import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    cdtype,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+
+NEG_INF = -2.0**30
+
+
+# --------------------------------------------------------------------------
+# scaled dot-product attention with grouped KV heads (no KV repeat in memory)
+# --------------------------------------------------------------------------
+
+def sdpa(
+    q: jax.Array,           # [B, Sq, H, D]
+    k: jax.Array,           # [B, Sk, K, D]
+    v: jax.Array,           # [B, Sk, K, Dv]
+    mask: jax.Array | None, # [B, Sq, Sk] bool or None
+    scale: float,
+    cap: float = 0.0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, d)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return ctx.reshape(b, sq, h, v.shape[-1])
+
+
+def causal_mask(sq: int, sk: int, window: int = 0) -> jax.Array:
+    """[1, Sq, Sk] bool; queries at positions sk-sq..sk-1."""
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    m = qpos >= kpos
+    if window > 0:
+        m &= (qpos - kpos) < window
+    return m[None]
+
+
+# --------------------------------------------------------------------------
+# statically-tiled flash attention (pure JAX)
+#
+# Python-unrolled q×kv tiles with online softmax: bounded VMEM-sized score
+# temps, true O(S·window) cost for local layers (fully-masked tiles are
+# skipped at TRACE time), and — unlike a lax.scan over tiles — every tile's
+# FLOPs/bytes are visible to the compiled-HLO cost analysis the roofline
+# reads. On real TPUs the Pallas kernel (repro.kernels.flash_attention)
+# replaces this; the tiling logic is deliberately identical.
+# --------------------------------------------------------------------------
+
+_FLASH_TILE = 2048
+
+
+def flash_xla(
+    q: jax.Array,            # [B, Sq, H, D]
+    k: jax.Array,            # [B, Sk, K, D]
+    v: jax.Array,            # [B, Sk, K, Dv]
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+    cap: float = 0.0,
+    tile_q: int = _FLASH_TILE,
+    tile_k: int = _FLASH_TILE,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kheads = k.shape[2]
+    g = h // kheads
+    if sq <= tile_q and sk <= tile_k:
+        mask = causal_mask(sq, sk, window) if causal else None
+        return sdpa(q, k, v, mask, scale, cap)
+
+    cq = min(tile_q, sq)
+    ck = min(tile_k, sk)
+    assert sq % cq == 0 and sk % ck == 0, (sq, cq, sk, ck)
+    offset = sk - sq  # query absolute position offset
+    out_chunks = []
+    for iq in range(sq // cq):
+        qs, qe = iq * cq, (iq + 1) * cq
+        qc = q[:, qs:qe].reshape(b, cq, kheads, g, d)
+        m_run = jnp.full((b, kheads, g, cq, 1), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((b, kheads, g, cq, 1), jnp.float32)
+        acc = jnp.zeros((b, cq, kheads, g, v.shape[-1]), jnp.float32)
+        for ik in range(sk // ck):
+            ks, ke = ik * ck, (ik + 1) * ck
+            if causal and qe - 1 + offset < ks:
+                continue  # tile fully in the future
+            if window > 0 and qs + offset - (ke - 1) >= window:
+                continue  # tile fully outside the window
+            kc = k[:, ks:ke]
+            vc = v[:, ks:ke]
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = softcap(s, cap)
+            qpos = jnp.arange(qs, qe)[:, None] + offset
+            kpos = jnp.arange(ks, ke)[None, :]
+            msk = jnp.ones((cq, ck), bool)
+            if causal:
+                msk &= qpos >= kpos
+            if window > 0:
+                msk &= (qpos - kpos) < window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1, keepdims=True))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new)
+            l_run = l_run * alpha + p.sum(axis=-1, keepdims=True)
+            acc = acc * alpha.transpose(0, 3, 1, 2, 4) + jnp.einsum(
+                "bkgqs,bskd->bqkgd", p.astype(v.dtype), vc
+            ).astype(jnp.float32)
+            m_run = m_new
+        l_safe = jnp.maximum(l_run, 1e-30).transpose(0, 3, 1, 2, 4)
+        out_chunks.append((acc / l_safe).astype(q.dtype))
+    out = jnp.concatenate(out_chunks, axis=1)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+_ATTN_IMPL: ContextVar = ContextVar("attn_impl", default="xla")
+
+
+@contextlib.contextmanager
+def attention_impl(name: str):
+    """Select the full-sequence attention execution path ('xla' | 'pallas').
+
+    'pallas' routes every full-seq attention through the TPU flash kernel
+    (interpret mode on CPU) — the real-hardware execution path, validated
+    against the XLA path in tests. Roofline/dry-run lowering keeps 'xla' so
+    FLOPs stay visible to HLO cost analysis (DESIGN.md §6).
+    """
+    token = _ATTN_IMPL.set(name)
+    try:
+        yield
+    finally:
+        _ATTN_IMPL.reset(token)
+
+
+def full_attention(
+    q, k, v, *, causal: bool, window: int, scale: float, cap: float = 0.0
+) -> jax.Array:
+    """Dispatch: Pallas kernel when selected (the TPU execution path),
+    else tiled flash-XLA for long sequences, plain sdpa otherwise."""
+    if _ATTN_IMPL.get() == "pallas":
+        from repro.kernels import flash_attention as pallas_flash
+
+        bq = min(128, q.shape[1])
+        bk = min(128, k.shape[1])
+        return pallas_flash(
+            q, k, v, causal=causal, window=window, softcap=cap, scale=scale,
+            block_q=bq, block_k=bk,
+        )
+    if q.shape[1] > _FLASH_TILE or k.shape[1] > _FLASH_TILE:
+        return flash_xla(
+            q, k, v, causal=causal, window=window, scale=scale, cap=cap
+        )
+    mask = causal_mask(q.shape[1], k.shape[1], window) if causal else None
+    return sdpa(q, k, v, mask, scale, cap)
+
+
+# --------------------------------------------------------------------------
+# standard (GQA) attention layer
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 4)
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], (d, h, hd), d, dt),
+        "wk": dense_init(ks[1], (d, kh, hd), d, dt),
+        "wv": dense_init(ks[2], (d, kh, hd), d, dt),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kh, hd), dt)
+        p["bv"] = jnp.zeros((kh, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dt)
+        p["k_norm"] = rmsnorm_init(hd, dt)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(cfg: ModelConfig, q, k, positions, mrope_pos):
+    if cfg.rope_theta <= 0.0:
+        return q, k
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,             # [B, S, D]
+    positions: jax.Array,     # [B, S]
+    kind: str = "global",     # "global" | "local"
+    mrope_pos: jax.Array | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill compute)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions, mrope_pos)
+    window = cfg.window if kind == "local" else 0
+    ctx = full_attention(
+        q, k, v, causal=causal, window=window,
+        scale=cfg.head_dim**-0.5, cap=cfg.attn_logit_softcap,
+    )
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# KV cache (standard layers)
+# --------------------------------------------------------------------------
+
+def kv_cache_init(
+    cfg: ModelConfig, batch: int, max_seq: int, kind: str
+) -> dict[str, jax.Array]:
+    s = min(max_seq, cfg.window) if (kind == "local" and cfg.window) else max_seq
+    dt = cdtype(cfg)
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, s), -1, jnp.int32),
+    }
+
+
+def attn_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict,
+    kind: str,
+    mrope_pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Full-seq attention + fill the cache (ring-rolled for local layers)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, positions, mrope_pos)
+    window = cfg.window if kind == "local" else 0
+    ctx = full_attention(
+        q, k, v, causal=True, window=window,
+        scale=cfg.head_dim**-0.5, cap=cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+    s_cache = cache["k"].shape[1]
+    if s <= s_cache:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, 0, 0, 0)
+            ),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, 0, 0, 0)
+            ),
+            "pos": jax.lax.dynamic_update_slice(
+                cache["pos"], positions.astype(jnp.int32), (0, 0)
+            ),
+        }
+    else:
+        # keep only the last s_cache entries, at slot = pos % s_cache
+        shift = s % s_cache
+        cache = {
+            "k": jnp.roll(k[:, s - s_cache :], shift, axis=1),
+            "v": jnp.roll(v[:, s - s_cache :], shift, axis=1),
+            "pos": jnp.roll(
+                positions[:, s - s_cache :].astype(jnp.int32), shift, axis=1
+            ),
+        }
+    return y, cache
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,            # [B, 1, D]
+    pos: jax.Array,          # [B] current position
+    cache: dict,
+    kind: str,
+    mrope_pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode against the cache."""
+    b = x.shape[0]
+    q, k, v = _qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, pos[:, None], mrope_pos)
+
+    s_cache = cache["k"].shape[1]
+    slot = (pos % s_cache).astype(jnp.int32)
+    bi = jnp.arange(b)
+    ck = cache["k"].at[bi, slot].set(k[:, 0])
+    cv = cache["v"].at[bi, slot].set(v[:, 0])
+    cp = cache["pos"].at[bi, slot].set(pos.astype(jnp.int32))
+
+    age = pos[:, None] - cp                       # [B, S_cache]
+    valid = (cp >= 0) & (age >= 0)
+    if kind == "local" and cfg.window:
+        valid &= age < cfg.window
+    ctx = sdpa(
+        q, ck, cv, valid[:, None, :], cfg.head_dim**-0.5,
+        cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return y, {"k": ck, "v": cv, "pos": cp}
+
+
+# --------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# --------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 4)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], (d, h, hd), d, dt),
+        "wk": dense_init(ks[1], (d, h, hd), d, dt),
+        "wv": dense_init(ks[2], (d, h, hd), d, dt),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dt),
+    }
+
+
+def cross_attn_kv(cfg: ModelConfig, p: Params, enc: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    return k, v
+
+
+def cross_attn_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array, kv: tuple[jax.Array, jax.Array]
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = kv
+    ctx = full_attention(
+        q, k, v, causal=False, window=0, scale=cfg.head_dim**-0.5
+    )
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2, minicpm3)
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p: Params = {}
+    if cfg.q_lora_rank > 0:
+        p["q_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), d, dt)
+        p["q_a_norm"] = rmsnorm_init(cfg.q_lora_rank, dt)
+        p["q_b"] = dense_init(
+            ks[1], (cfg.q_lora_rank, h, dn + dr), cfg.q_lora_rank, dt
+        )
+    else:
+        p["q_proj"] = dense_init(ks[1], (d, h, dn + dr), d, dt)
+    p["kv_a"] = dense_init(ks[2], (d, cfg.kv_lora_rank + dr), d, dt)
+    p["kv_a_norm"] = rmsnorm_init(cfg.kv_lora_rank, dt)
+    p["kv_b"] = dense_init(
+        ks[3], (cfg.kv_lora_rank, h, dn + dv), cfg.kv_lora_rank, dt
+    )
+    p["wo"] = dense_init(ks[4], (h, dv, d), h * dv, dt)
+    return p
+
+
+def _mla_q(cfg: ModelConfig, p: Params, x, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank > 0:
+        qa = rmsnorm(p["q_a_norm"], jnp.einsum("bsd,dr->bsr", x, p["q_a"]),
+                     cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["q_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["q_proj"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(cfg: ModelConfig, p: Params, x, positions):
+    dr = cfg.qk_rope_head_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank :]
+    c = rmsnorm(p["kv_a_norm"], c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c, k_rope[:, :, 0, :]  # [B,S,L], [B,S,dr]
+
+
+def mla_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """Full-sequence MLA (naive expansion — train/prefill compute)."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c, k_rope = _mla_ckv(cfg, p, x, positions)
+    kv = jnp.einsum("bsl,lhk->bshk", c, p["kv_b"])
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (dr,))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ctx = full_attention(
+        q, k, v, causal=True, window=0, scale=(dn + dr) ** -0.5
+    )
+    return jnp.einsum("bshv,hvd->bsd", ctx, p["wo"])
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    dt = cdtype(cfg)
+    return {
+        "c": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dt),
+        "pos": jnp.full((batch, max_seq), -1, jnp.int32),
+    }
+
+
+def mla_prefill(
+    cfg: ModelConfig, p: Params, x, positions, cache
+) -> tuple[jax.Array, dict]:
+    y = mla_apply(cfg, p, x, positions)
+    c, k_rope = _mla_ckv(cfg, p, x, positions)
+    cache = {
+        "c": jax.lax.dynamic_update_slice(cache["c"], c, (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope, (0, 0, 0)
+        ),
+        "pos": jax.lax.dynamic_update_slice(
+            cache["pos"], positions.astype(jnp.int32), (0, 0)
+        ),
+    }
+    return y, cache
+
+
+def mla_decode(
+    cfg: ModelConfig, p: Params, x, pos, cache
+) -> tuple[jax.Array, dict]:
+    """Absorbed-matrix MLA decode: attention runs entirely in the compressed
+    latent space — the cache holds only (kv_lora + rope) per token."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])    # [B,1,H,dn],[B,1,H,dr]
+    c_new, kr_new = _mla_ckv(cfg, p, x, pos[:, None])   # [B,1,L],[B,1,dr]
+
+    bi = jnp.arange(b)
+    cc = cache["c"].at[bi, pos].set(c_new[:, 0])
+    ckr = cache["k_rope"].at[bi, pos].set(kr_new[:, 0])
+    cp = cache["pos"].at[bi, pos].set(pos.astype(jnp.int32))
+
+    w_uk = p["kv_b"][..., :dn]   # [L, H, dn]
+    w_uv = p["kv_b"][..., dn:]   # [L, H, dv]
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_abs.astype(jnp.float32),
+                   cc.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                     ckr.astype(jnp.float32))
+    ) * (dn + dr) ** -0.5
+    valid = (cp >= 0) & (cp <= pos[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+    ctx_c = jnp.einsum("bhqs,bsl->bqhl", prob, cc)
+    ctx = jnp.einsum("bqhl,lhv->bqhv", ctx_c, w_uv)
+    y = jnp.einsum("bshv,hvd->bsd", ctx, p["wo"])
+    return y, {"c": cc, "k_rope": ckr, "pos": cp}

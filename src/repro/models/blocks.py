@@ -1,0 +1,272 @@
+"""Transformer blocks: one (init, apply, prefill, decode) family per layer kind.
+
+Layer kinds (``ModelConfig.layer_pattern`` entries):
+- "global"    — full causal attention + FFN/MoE
+- "local"     — sliding-window attention + FFN/MoE
+- "recurrent" — Griffin RG-LRU block + FFN
+- "rwkv"      — RWKV6 time mix + channel mix
+
+All blocks are pre-norm residual; gemma2 additionally applies post-norms
+(``cfg.post_norms``). MoE-ness is decided at stack level (scanned segments
+are homogeneous), so a block is constructed as either dense or MoE.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.attention import (
+    attn_apply,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+    kv_cache_init,
+    mla_apply,
+    mla_cache_init,
+    mla_decode,
+    mla_init,
+    mla_prefill,
+)
+from repro.models.common import Params, norm, norm_init
+from repro.models.ffn import ffn_apply, ffn_init, moe_apply, moe_init
+from repro.models.recurrent import (
+    recurrent_block_apply,
+    recurrent_block_init,
+    recurrent_block_step,
+    recurrent_cache_init,
+    rwkv_cache_init,
+    rwkv_channel_mix_apply,
+    rwkv_channel_mix_init,
+    rwkv_channel_mix_step,
+    rwkv_time_mix_apply,
+    rwkv_time_mix_init,
+    rwkv_time_mix_step,
+)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def block_init(
+    key, cfg: ModelConfig, kind: str, moe: bool, d_ff: int | None = None
+) -> Params:
+    """One block's params. ``moe`` selects MoE vs dense FFN (attn kinds)."""
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"norm1": norm_init(cfg, d), "norm2": norm_init(cfg, d)}
+    if kind == "rwkv":
+        p["time_mix"] = rwkv_time_mix_init(ks[0], cfg)
+        p["channel_mix"] = rwkv_channel_mix_init(ks[1], cfg)
+        return p
+    if kind == "recurrent":
+        p["mixer"] = recurrent_block_init(ks[0], cfg)
+    elif cfg.use_mla:
+        p["mixer"] = mla_init(ks[0], cfg)
+    else:
+        p["mixer"] = attn_init(ks[0], cfg)
+    if moe:
+        p["ffn"] = moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg, d_ff=d_ff)
+    if cfg.post_norms:
+        p["post_norm1"] = norm_init(cfg, d)
+        p["post_norm2"] = norm_init(cfg, d)
+    return p
+
+
+# --------------------------------------------------------------------------
+# full-sequence apply (train / prefill compute)
+# --------------------------------------------------------------------------
+
+def _residual(cfg: ModelConfig, p: Params, x, sub, post_key: str):
+    if cfg.post_norms:
+        sub = norm(cfg, p[post_key], sub)
+    return x + sub
+
+
+def block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    kind: str,
+    moe: bool,
+    x: jax.Array,
+    positions: jax.Array,
+    mrope_pos: jax.Array | None = None,
+    causal: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        h = norm(cfg, p["norm1"], x)
+        x = x + rwkv_time_mix_apply(cfg, p["time_mix"], h)
+        h = norm(cfg, p["norm2"], x)
+        x = x + rwkv_channel_mix_apply(cfg, p["channel_mix"], h)
+        return x, aux
+
+    h = norm(cfg, p["norm1"], x)
+    if kind == "recurrent":
+        sub = recurrent_block_apply(cfg, p["mixer"], h)
+    elif cfg.use_mla:
+        sub = mla_apply(cfg, p["mixer"], h, positions)
+    else:
+        sub = attn_apply(cfg, p["mixer"], h, positions, kind,
+                         mrope_pos=mrope_pos, causal=causal)
+    x = _residual(cfg, p, x, sub, "post_norm1")
+
+    h = norm(cfg, p["norm2"], x)
+    if moe:
+        sub, aux = moe_apply(cfg, p["ffn"], h)
+    else:
+        sub = ffn_apply(cfg, p["ffn"], h)
+    x = _residual(cfg, p, x, sub, "post_norm2")
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def block_cache_init(
+    cfg: ModelConfig, kind: str, batch: int, max_seq: int
+) -> dict:
+    if kind == "rwkv":
+        return rwkv_cache_init(cfg, batch)
+    if kind == "recurrent":
+        return recurrent_cache_init(cfg, batch)
+    if cfg.use_mla:
+        return mla_cache_init(cfg, batch, max_seq)
+    return kv_cache_init(cfg, batch, max_seq, kind)
+
+
+def block_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    kind: str,
+    moe: bool,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: dict,
+    mrope_pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Full-seq compute + cache fill. Recurrent kinds advance their state by
+    scanning the sequence (their 'cache' is the final state)."""
+    if kind == "rwkv":
+        h = norm(cfg, p["norm1"], x)
+        # run full sequence, then recompute final state via one batched pass
+        y = rwkv_time_mix_apply(cfg, p["time_mix"], h)
+        x = x + y
+        h2 = norm(cfg, p["norm2"], x)
+        x = x + rwkv_channel_mix_apply(cfg, p["channel_mix"], h2)
+        cache = _rwkv_state_from_prefill(cfg, p, h, h2, cache)
+        return x, cache
+    if kind == "recurrent":
+        h = norm(cfg, p["norm1"], x)
+        sub, cache = _recurrent_prefill(cfg, p["mixer"], h, cache)
+        x = _residual(cfg, p, x, sub, "post_norm1")
+        h = norm(cfg, p["norm2"], x)
+        x = _residual(cfg, p, x, ffn_apply(cfg, p["ffn"], h), "post_norm2")
+        return x, cache
+
+    h = norm(cfg, p["norm1"], x)
+    if cfg.use_mla:
+        sub, cache = mla_prefill(cfg, p["mixer"], h, positions, cache)
+    else:
+        sub, cache = attn_prefill(
+            cfg, p["mixer"], h, positions, cache, kind, mrope_pos
+        )
+    x = _residual(cfg, p, x, sub, "post_norm1")
+    h = norm(cfg, p["norm2"], x)
+    if moe:
+        sub, _ = moe_apply(cfg, p["ffn"], h)
+    else:
+        sub = ffn_apply(cfg, p["ffn"], h)
+    x = _residual(cfg, p, x, sub, "post_norm2")
+    return x, cache
+
+
+def block_decode(
+    cfg: ModelConfig,
+    p: Params,
+    kind: str,
+    moe: bool,
+    x: jax.Array,          # [B, 1, D]
+    pos: jax.Array,        # [B]
+    cache: dict,
+    mrope_pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    if kind == "rwkv":
+        h = norm(cfg, p["norm1"], x)
+        y, cache = rwkv_time_mix_step(cfg, p["time_mix"], h, cache)
+        x = x + y
+        h = norm(cfg, p["norm2"], x)
+        y, cache = rwkv_channel_mix_step(cfg, p["channel_mix"], h, cache)
+        x = x + y
+        return x, cache
+
+    h = norm(cfg, p["norm1"], x)
+    if kind == "recurrent":
+        sub, cache = recurrent_block_step(cfg, p["mixer"], h, cache)
+    elif cfg.use_mla:
+        sub, cache = mla_decode(cfg, p["mixer"], h, pos, cache)
+    else:
+        sub, cache = attn_decode(
+            cfg, p["mixer"], h, pos, cache, kind, mrope_pos
+        )
+    x = _residual(cfg, p, x, sub, "post_norm1")
+    h = norm(cfg, p["norm2"], x)
+    if moe:
+        sub, _ = moe_apply(cfg, p["ffn"], h)
+    else:
+        sub = ffn_apply(cfg, p["ffn"], h)
+    x = _residual(cfg, p, x, sub, "post_norm2")
+    return x, cache
+
+
+# ---- prefill state helpers for recurrent kinds -----------------------------
+
+def _recurrent_prefill(cfg: ModelConfig, p: Params, h, cache):
+    """Griffin block full-seq + final (h, conv) state extraction."""
+    from repro.models.recurrent import _causal_conv, rglru_scan, _rglru_gates
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["wi_gate"]),
+                       approximate=True)
+    u = jnp.einsum("bsd,dw->bsw", h, p["wi_x"])
+    conv = _causal_conv(p, u, cfg.conv_width)
+    y = rglru_scan(p["lru"], conv, cfg.n_heads)
+    out = jnp.einsum("bsw,wd->bsd", gate * y, p["wo"])
+    cw = cfg.conv_width
+    new_cache = {
+        "h": y[:, -1].astype(jnp.float32),
+        "conv": u[:, -(cw - 1):],
+    }
+    return out, new_cache
+
+
+def _rwkv_state_from_prefill(cfg, p, h_tm, h_cm, cache):
+    """Recompute the RWKV recurrent state after a full-seq pass."""
+    from repro.models.recurrent import _wkv_inputs
+
+    b, s, d = h_tm.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    x_prev = jnp.pad(h_tm, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, _ = _wkv_inputs(cfg, p["time_mix"], h_tm, x_prev)
+
+    def step(S, inp):
+        k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        return w_t[..., None] * S + kv, None
+
+    S0 = cache["S"]
+    seq = (
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3),
+    )
+    S, _ = jax.lax.scan(step, S0, seq)
+    return {"S": S, "x_prev_tm": h_tm[:, -1], "x_prev_cm": h_cm[:, -1]}

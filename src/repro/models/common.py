@@ -1,0 +1,206 @@
+"""Shared model components: norms, RoPE/M-RoPE, embeddings, initializers.
+
+Pure-functional style: parameters are nested dicts of arrays; every module is
+(init, apply) function pairs. Stacked (scanned) layers carry a leading
+``[n_blocks, ...]`` axis on every leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.sharding.ctx import constrain
+
+Params = dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-style)."""
+    std = in_axis_size ** -0.5
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    ).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * 0.02
+    ).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms — computed in f32 regardless of activation dtype
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init scale == identity
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm_kind == "layernorm":
+        return layernorm_init(d, cdtype(cfg))
+    return rmsnorm_init(d, cdtype(cfg))
+
+
+def norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm_kind == "layernorm":
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (+ M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32. Split-half convention."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: tuple[int, ...],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions: [3, B, S] — (temporal, height, width) streams.
+    ``sections`` are half-dim section lengths summing to D//2; section ``i``
+    takes its angles from position stream ``i``.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    ang_each = positions[..., None].astype(jnp.float32) * freqs  # [3,B,S,half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_each[i, :, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table [n, d] (f32)."""
+    half = d // 2
+    scale = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1)
+    )
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    p = {"table": embed_init(key, (cfg.vocab_size, cfg.d_model), cdtype(cfg))}
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    x = p["table"][tokens]
+    if cfg.emb_scale == "sqrt_d":
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    elif cfg.emb_scale == "const12":
+        x = x * jnp.asarray(12.0, x.dtype)
+    return x
+
+
+def logits_from_hidden(
+    cfg: ModelConfig, embed_params: Params, head: Params | None, x: jax.Array
+) -> jax.Array:
+    """Final projection to vocabulary, in f32, with optional softcap.
+
+    The vocab axis is padded up to a multiple of the model-axis size
+    (Megatron-style vocab-parallel logits) so indivisible vocabularies
+    (whisper 51866, minicpm3 73448) still shard; pad columns carry −inf so
+    downstream softmax/CE ignore them. The pad is sliced off before return
+    only when no mesh is active (tests)."""
+    from repro.sharding.ctx import tp_size
+
+    if cfg.tie_embeddings or head is None:
+        w = embed_params["table"]  # [V, d]
+    else:
+        w = head["w"].T            # [V, d]
+    v = w.shape[0]
+    tp = tp_size()
+    pad = (-v) % tp
+    if pad:
+        w = jnp.concatenate([w, jnp.zeros((pad, w.shape[1]), w.dtype)], 0)
+    logits = jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    if cfg.final_logit_softcap > 0.0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if pad:
+        neg = jnp.full((pad,), -2.0**30, logits.dtype)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((v,), logits.dtype), neg]
+        )
+    # keep the vocab axis sharded over 'model' — the CE loss consumes sharded
+    # logits without ever materializing the full [B,S,V] f32 tensor
+    return constrain(logits, "dp", *([None] * (logits.ndim - 2)), "tp")
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0.0 else x

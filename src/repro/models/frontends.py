@@ -1,0 +1,49 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE only;
+``input_specs()`` provides precomputed frame/patch embeddings. These helpers
+generate those stand-ins for smoke tests and document the contract:
+
+- audio  (whisper): frames ``[B, T, d_model]`` — what the mel+conv stack
+  would emit after its stride-2 downsampling.
+- vision (qwen2-vl): a merged token stream ``[B, S]`` plus M-RoPE position
+  ids ``[3, B, S]`` — what the ViT patch encoder + merger would emit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+
+def audio_frames_stub(key, cfg: ModelConfig, batch: int, t: int) -> jax.Array:
+    return jax.random.normal(key, (batch, t, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def vision_stream_stub(
+    key, cfg: ModelConfig, batch: int, s: int, image_frac: float = 0.25
+) -> tuple[jax.Array, jax.Array]:
+    """Tokens + M-RoPE positions for a text/[image]/text stream.
+
+    The leading ``image_frac`` of the stream stands for a merged image patch
+    grid: its (t,h,w) position ids follow the grid; the text remainder has
+    all three streams equal (Qwen2-VL convention).
+    """
+    k1, _ = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, s), 0, cfg.vocab_size)
+    n_img = int(s * image_frac)
+    side = max(int(n_img**0.5), 1)
+    n_img = side * side
+    idx = jnp.arange(n_img)
+    img_t = jnp.zeros((n_img,), jnp.int32)
+    img_h = (idx // side).astype(jnp.int32)
+    img_w = (idx % side).astype(jnp.int32)
+    text_pos = jnp.arange(s - n_img, dtype=jnp.int32) + side  # after grid
+    t_stream = jnp.concatenate([img_t, text_pos])
+    h_stream = jnp.concatenate([img_h, text_pos])
+    w_stream = jnp.concatenate([img_w, text_pos])
+    mrope = jnp.stack([t_stream, h_stream, w_stream])          # [3, S]
+    mrope = jnp.broadcast_to(mrope[:, None, :], (3, batch, s))
+    return tokens, mrope

@@ -1,0 +1,359 @@
+"""Decoder-only LM assembly: scanned layer stacks for every assigned family.
+
+The stack is split into three segments so that ``lax.scan`` bodies stay
+homogeneous (critical for compile time at 42–62 layers on a 512-way mesh):
+
+- **head**: leading layers that differ from the steady state (deepseek-v2's
+  first dense layer), applied unscanned;
+- **scanned**: ``n_blocks`` repetitions of ``cfg.layer_pattern`` with stacked
+  params ``[n_blocks, ...]``;
+- **tail**: remainder layers when ``n_layers`` is not a multiple of the
+  pattern (recurrentgemma: 26 = 8×(R,R,L) + R,R), applied unscanned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.blocks import (
+    block_apply,
+    block_cache_init,
+    block_decode,
+    block_init,
+    block_prefill,
+)
+from repro.models.common import (
+    Params,
+    embed_tokens,
+    embedding_init,
+    dense_init,
+    cdtype,
+    logits_from_hidden,
+    norm,
+    norm_init,
+)
+from repro.sharding.ctx import constrain
+
+
+class StackPlan(NamedTuple):
+    head: tuple[tuple[str, bool, int | None], ...]  # (kind, moe, d_ff)
+    n_blocks: int
+    pattern: tuple[tuple[str, bool], ...]           # (kind, moe) per position
+    tail: tuple[tuple[str, bool], ...]
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    head = []
+    for i in range(cfg.first_dense_layers):
+        head.append((cfg.layer_kind(i), False, cfg.dense_d_ff or cfg.d_ff))
+    rest = cfg.n_layers - len(head)
+    plen = cfg.pattern_len
+    n_blocks = rest // plen
+    moe = cfg.n_experts > 0
+    pattern = tuple(
+        (cfg.layer_kind(len(head) + j), moe) for j in range(plen)
+    )
+    tail = tuple(
+        (cfg.layer_kind(len(head) + n_blocks * plen + j), moe)
+        for j in range(rest - n_blocks * plen)
+    )
+    return StackPlan(tuple(head), n_blocks, pattern, tail)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    plan = stack_plan(cfg)
+    ks = jax.random.split(key, 6)
+    params: Params = {"embed": embedding_init(ks[0], cfg)}
+
+    def group_init(k):
+        kk = jax.random.split(k, len(plan.pattern))
+        return {
+            f"l{j}": block_init(kk[j], cfg, kind, moe)
+            for j, (kind, moe) in enumerate(plan.pattern)
+        }
+
+    if plan.n_blocks > 0:
+        params["blocks"] = jax.vmap(group_init)(
+            jax.random.split(ks[1], plan.n_blocks)
+        )
+    if plan.head:
+        hk = jax.random.split(ks[2], len(plan.head))
+        params["head_layers"] = [
+            block_init(hk[i], cfg, kind, moe, d_ff=d_ff)
+            for i, (kind, moe, d_ff) in enumerate(plan.head)
+        ]
+    if plan.tail:
+        tk = jax.random.split(ks[3], len(plan.tail))
+        params["tail_layers"] = [
+            block_init(tk[i], cfg, kind, moe)
+            for i, (kind, moe) in enumerate(plan.tail)
+        ]
+    params["final_norm"] = norm_init(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": dense_init(
+                ks[4], (cfg.d_model, cfg.vocab_size), cfg.d_model, cdtype(cfg)
+            )
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill compute)
+# --------------------------------------------------------------------------
+
+def lm_apply(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # [B, S] int32 (or [B,S,D] embeddings)
+    positions: jax.Array | None = None,
+    mrope_pos: jax.Array | None = None,
+    remat: str = "none",
+    inputs_embeds: jax.Array | None = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,V] f32, moe_aux scalar).
+
+    ``unroll=True`` replaces the layer-stack ``lax.scan`` with a python loop
+    (used by the dry-run coster: scan bodies are invisible to HLO cost
+    analysis trip counts)."""
+    plan = stack_plan(cfg)
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    else:
+        x = embed_tokens(cfg, params["embed"], tokens)
+    x = constrain(x, "dp", None, None)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux = jnp.zeros((), jnp.float32)
+
+    def run_block(p, kind, moe, x):
+        x, a = block_apply(cfg, p, kind, moe, x, positions, mrope_pos)
+        return constrain(x, "dp", None, None), a
+
+    for i, (kind, moe, _) in enumerate(plan.head):
+        x, a = run_block(params["head_layers"][i], kind, moe, x)
+        aux = aux + a
+
+    if plan.n_blocks > 0:
+        def group(x, bp):
+            a_sum = jnp.zeros((), jnp.float32)
+            for j, (kind, moe) in enumerate(plan.pattern):
+                x, a = run_block(bp[f"l{j}"], kind, moe, x)
+                a_sum = a_sum + a
+            return x, a_sum
+
+        if remat == "full":
+            group = jax.checkpoint(group)
+        elif remat == "dots":
+            group = jax.checkpoint(
+                group,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+
+        if unroll:
+            for i in range(plan.n_blocks):
+                bp = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                x, a = group(x, bp)
+                aux = aux + a
+        else:
+            def body(carry, bp):
+                x, aux = carry
+                x, a = group(x, bp)
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    for i, (kind, moe) in enumerate(plan.tail):
+        x, a = run_block(params["tail_layers"][i], kind, moe, x)
+        aux = aux + a
+
+    x = norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(
+        cfg, params["embed"], params.get("lm_head"), x
+    )
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def lm_cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    plan = stack_plan(cfg)
+    cache: dict[str, Any] = {}
+    if plan.head:
+        cache["head"] = [
+            block_cache_init(cfg, kind, batch, max_seq)
+            for kind, moe, _ in plan.head
+        ]
+    if plan.n_blocks > 0:
+        def one(_):
+            return {
+                f"l{j}": block_cache_init(cfg, kind, batch, max_seq)
+                for j, (kind, _) in enumerate(plan.pattern)
+            }
+
+        cache["blocks"] = jax.vmap(one)(jnp.arange(plan.n_blocks))
+    if plan.tail:
+        cache["tail"] = [
+            block_cache_init(cfg, kind, batch, max_seq)
+            for kind, _ in plan.tail
+        ]
+    return cache
+
+
+# --------------------------------------------------------------------------
+# prefill / decode
+# --------------------------------------------------------------------------
+
+def lm_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jax.Array,
+    positions: jax.Array | None = None,
+    mrope_pos: jax.Array | None = None,
+    inputs_embeds: jax.Array | None = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence prefill; returns (last-position logits [B,V], cache)."""
+    plan = stack_plan(cfg)
+    x = (
+        inputs_embeds
+        if inputs_embeds is not None
+        else embed_tokens(cfg, params["embed"], tokens)
+    )
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    new_cache: dict[str, Any] = {}
+
+    if plan.head:
+        hc = []
+        for i, (kind, moe, _) in enumerate(plan.head):
+            x, c = block_prefill(
+                cfg, params["head_layers"][i], kind, moe, x, positions,
+                cache["head"][i], mrope_pos,
+            )
+            hc.append(c)
+        new_cache["head"] = hc
+
+    if plan.n_blocks > 0:
+        def body(x, xs):
+            bp, bc = xs
+            cs = {}
+            for j, (kind, moe) in enumerate(plan.pattern):
+                x, c = block_prefill(
+                    cfg, bp[f"l{j}"], kind, moe, x, positions,
+                    bc[f"l{j}"], mrope_pos,
+                )
+                cs[f"l{j}"] = c
+            return x, cs
+
+        if unroll:
+            outs = []
+            for i in range(plan.n_blocks):
+                xs_i = jax.tree.map(
+                    lambda a, i=i: a[i], (params["blocks"], cache["blocks"])
+                )
+                x, cs = body(x, xs_i)
+                outs.append(cs)
+            new_cache["blocks"] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *outs
+            )
+        else:
+            x, new_cache["blocks"] = jax.lax.scan(
+                body, x, (params["blocks"], cache["blocks"])
+            )
+
+    if plan.tail:
+        tc = []
+        for i, (kind, moe) in enumerate(plan.tail):
+            x, c = block_prefill(
+                cfg, params["tail_layers"][i], kind, moe, x, positions,
+                cache["tail"][i], mrope_pos,
+            )
+            tc.append(c)
+        new_cache["tail"] = tc
+
+    x = norm(cfg, params["final_norm"], x[:, -1:])
+    logits = logits_from_hidden(cfg, params["embed"], params.get("lm_head"), x)
+    return logits[:, 0], new_cache
+
+
+def lm_decode(
+    params: Params,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jax.Array,       # [B] int32
+    pos: jax.Array,          # [B] int32 current position
+    mrope_pos: jax.Array | None = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    """One decode step; returns (logits [B, V] f32, cache)."""
+    plan = stack_plan(cfg)
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    new_cache: dict[str, Any] = {}
+
+    if plan.head:
+        hc = []
+        for i, (kind, moe, _) in enumerate(plan.head):
+            x, c = block_decode(
+                cfg, params["head_layers"][i], kind, moe, x, pos,
+                cache["head"][i], mrope_pos,
+            )
+            hc.append(c)
+        new_cache["head"] = hc
+
+    if plan.n_blocks > 0:
+        def body(x, xs):
+            bp, bc = xs
+            cs = {}
+            for j, (kind, moe) in enumerate(plan.pattern):
+                x, c = block_decode(
+                    cfg, bp[f"l{j}"], kind, moe, x, pos,
+                    bc[f"l{j}"], mrope_pos,
+                )
+                cs[f"l{j}"] = c
+            return x, cs
+
+        if unroll:
+            outs = []
+            for i in range(plan.n_blocks):
+                xs_i = jax.tree.map(
+                    lambda a, i=i: a[i], (params["blocks"], cache["blocks"])
+                )
+                x, cs = body(x, xs_i)
+                outs.append(cs)
+            new_cache["blocks"] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *outs
+            )
+        else:
+            x, new_cache["blocks"] = jax.lax.scan(
+                body, x, (params["blocks"], cache["blocks"])
+            )
+
+    if plan.tail:
+        tc = []
+        for i, (kind, moe) in enumerate(plan.tail):
+            x, c = block_decode(
+                cfg, params["tail_layers"][i], kind, moe, x, pos,
+                cache["tail"][i], mrope_pos,
+            )
+            tc.append(c)
+        new_cache["tail"] = tc
+
+    x = norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params["embed"], params.get("lm_head"), x)
+    return logits[:, 0], new_cache

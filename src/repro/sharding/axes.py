@@ -1,0 +1,282 @@
+"""Sharding rules: param/batch/cache PartitionSpecs with divisibility fallback.
+
+Strategy (MaxText-style, DESIGN.md §4):
+- mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+  multi-pod. ``pod``+``data`` together form the DP/FSDP axis group.
+- params: FSDP-shard the d_model ("embed") dim over ``data``; tensor-parallel
+  shard heads / d_ff / experts / vocab over ``model``.
+- activations/batch: batch over ``("pod","data")``.
+- decode KV caches: batch over ``data``, cache sequence over ``model``
+  (context-parallel decode).
+
+Every rule is divisibility-checked against the actual dim size and falls back
+to replication — one rule set stays valid across all 10 architectures (e.g.
+recurrentgemma's 10 heads or MQA kv=1 simply replicate over ``model``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.utils.tree import tree_map_with_path
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, size: int, *candidates):
+    """First candidate axis (or axis tuple) that evenly divides ``size``."""
+    for cand in candidates:
+        if cand is None:
+            continue
+        if size % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def _param_leaf_spec(
+    cfg: ModelConfig, mesh: Mesh, path: str, shape: tuple[int, ...]
+) -> P:
+    """PartitionSpec for one param leaf, by path suffix + shape."""
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    nd = len(shape)
+
+    # leading stacked-layer (scan) axis stays unsharded
+    lead: tuple = ()
+    if parts and parts[0] in ("blocks", "enc_blocks", "dec_blocks"):
+        lead = (None,)
+        shape = shape[1:]
+        nd -= 1
+
+    def spec(*axes):
+        resolved = []
+        used: set = set()
+        for ax, dim in zip(axes, shape):
+            cand = ax
+            if cand is not None:
+                names = set(cand) if isinstance(cand, tuple) else {cand}
+                if (used & names) or dim % _axis_size(mesh, cand) != 0:
+                    cand = None
+                else:
+                    used |= names
+            resolved.append(cand)
+        return P(*lead, *resolved)
+
+    # ---- embeddings / heads --------------------------------------------
+    if name == "table":                       # [V, d]
+        return spec(tp, dp)
+    if parent == "lm_head" and name == "w":   # [d, V]
+        return spec(dp, tp)
+
+    # ---- MoE -------------------------------------------------------------
+    if name == "router":                      # [d, E]
+        return spec(dp, tp)
+    if nd == 3 and shape[0] == cfg.n_experts and name in (
+        "wi_gate", "wi_up", "wo"
+    ):
+        if name == "wo":                      # [E, m, d]
+            return spec(tp, None, dp)
+        return spec(tp, dp, None)             # [E, d, m]
+
+    # ---- attention --------------------------------------------------------
+    if name in ("wq", "q_proj") and nd == 3:  # [d, H, hd]
+        return spec(dp, tp, None)
+    if name in ("wk", "wv") and nd == 3:      # [d, K, hd]
+        return spec(dp, tp, None)
+    if name == "wo" and nd == 3:              # [H, hd, d]
+        return spec(tp, None, dp)
+    if name in ("bq", "bk", "bv"):            # [H, hd]
+        return spec(tp, None)
+
+    # ---- MLA ----------------------------------------------------------------
+    if name == "q_a":                         # [d, q_lora]
+        return spec(dp, None)
+    if name in ("q_b", "kv_b"):               # [q_lora|L, H, dn+dr|dn+dv]
+        # TP on heads when divisible; else REPLICATE — these are small
+        # (low-rank) and dp-sharding them turns every layer's expansion into
+        # a collective-permute storm (observed on minicpm3 prefill_32k)
+        return spec(None, tp, None)
+    if name == "kv_a":                        # [d, L+dr]
+        return spec(dp, None)
+
+    # ---- dense FFN -----------------------------------------------------------
+    if name in ("wi_gate", "wi_up") and nd == 2:
+        # recurrent block in-projs [d, W] and ffn [d, m]: TP the wide dim
+        return spec(dp, tp)
+    if name == "wo" and nd == 2:              # [m|W, d] or rwkv [d, d]
+        return spec(tp, dp)
+
+    # ---- recurrent (RG-LRU) -----------------------------------------------
+    if name == "wi_x":                        # [d, W]
+        return spec(dp, tp)
+    if name == "conv_w":                      # [cw, W]
+        return spec(None, tp)
+    if name in ("conv_b", "a_param", "ba", "bx"):
+        return spec(tp)
+    if name in ("wa", "wx") and nd == 3:      # [h, hd, hd] block-diag gates
+        return spec(tp, None, None)
+
+    # ---- RWKV ------------------------------------------------------------------
+    if parent == "time_mix" and name in ("wr", "wk", "wv", "wg") and nd == 2:
+        return spec(dp, tp)                   # [d, d]
+    if parent == "channel_mix" and name in ("wk",) and nd == 2:
+        return spec(dp, tp)                   # [d, m]
+    if parent == "channel_mix" and name in ("wv",) and nd == 2:
+        return spec(tp, dp)                   # [m, d]
+    if parent == "channel_mix" and name in ("wr",) and nd == 2:
+        return spec(dp, tp)
+    if name == "ts_w1":                       # [d, 5*lora]
+        return spec(dp, None)
+    if name == "ts_w2":                       # [5, lora, d]
+        return spec(None, None, dp)
+    if name in ("w_lora1",):
+        return spec(dp, None)
+    if name in ("w_lora2",):
+        return spec(None, dp)
+    if name == "u":                           # [H, hd]
+        return spec(tp, None)
+    if name == "frame_proj":
+        return spec(dp, tp)
+
+    # ---- everything else (norm scales, mus, biases): replicate -------------
+    return P(*lead, *([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, abstract_params: Any, mesh: Mesh) -> Any:
+    return tree_map_with_path(
+        lambda path, leaf: _param_leaf_spec(cfg, mesh, path, leaf.shape),
+        abstract_params,
+    )
+
+
+def param_shardings(cfg: ModelConfig, abstract_params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(cfg, abstract_params, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_shardings(
+    cfg: ModelConfig, abstract_opt_state: Any, abstract_params: Any, mesh: Mesh
+) -> Any:
+    """Adam m/v mirror the param sharding; scalar step is replicated."""
+    pspecs = param_specs(cfg, abstract_params, mesh)
+
+    def one(leaf_spec):
+        return NamedSharding(mesh, leaf_spec)
+
+    mirrored = jax.tree.map(one, pspecs, is_leaf=lambda x: isinstance(x, P))
+    step_shard = NamedSharding(mesh, P())
+    return type(abstract_opt_state)(
+        step=step_shard, m=mirrored, v=mirrored
+    )
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, abstract_batch: Any) -> Any:
+    """Batch dim → DP axes (divisibility-checked: a global batch of 1, as in
+    long_500k, replicates); M-RoPE position arrays are [3, B, S]."""
+    dp = dp_axes(mesh)
+
+    def fit(dim):
+        return dp if (dp and dim % _axis_size(mesh, dp) == 0) else None
+
+    def one(path, leaf):
+        if path.endswith("mrope_pos"):
+            return P(None, fit(leaf.shape[1]),
+                     *([None] * (len(leaf.shape) - 2)))
+        return P(fit(leaf.shape[0]), *([None] * (len(leaf.shape) - 1)))
+
+    return tree_map_with_path(one, abstract_batch)
+
+
+def batch_shardings(mesh: Mesh, abstract_batch: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        batch_specs(mesh, abstract_batch),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _cache_leaf_spec(
+    mesh: Mesh, batch: int, path: str, shape: tuple[int, ...]
+) -> P:
+    """Decode caches: batch→data, long sequence dim→model (context parallel).
+
+    Handles: kv caches {k,v:[B,S,K,hd], pos:[B,S]}, MLA {c:[B,S,L],
+    k_rope:[B,S,dr]}, recurrent {h:[B,W], conv:[B,cw,W]},
+    rwkv {S:[B,H,dk,dv], x_prev_*:[B,d]}, whisper cross {k,v:[L,B,T,H,hd]}.
+    A leading stacked-layer axis (size != batch) is skipped.
+    """
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    parts = path.split("/")
+    name = parts[-1]
+
+    lead: tuple = ()
+    # stacked-layer leading axis: caches under the scanned segments
+    if parts[0] in ("blocks", "self", "cross"):
+        lead = (None,)
+        shape = shape[1:]
+
+    def fit(axis, dim):
+        return axis if (axis and dim % _axis_size(mesh, axis) == 0) else None
+
+    bspec = fit(dp, shape[0])
+    rest = [None] * (len(shape) - 1)
+    if name in ("k", "v", "pos", "c", "k_rope") and len(shape) >= 2:
+        rest[0] = fit(tp, shape[1])               # cache sequence dim
+    elif name == "S" and len(shape) == 4:          # rwkv state [B,H,dk,dv]
+        rest[0] = fit(tp, shape[1])
+        if rest[0] is None:
+            rest[2] = fit(tp, shape[3])
+    elif name in ("h",) and len(shape) == 2:       # rglru state [B,W]
+        rest[0] = fit(tp, shape[1])
+    elif name == "conv" and len(shape) == 3:       # conv history [B,cw,W]
+        rest[1] = fit(tp, shape[2])
+    return P(*lead, bspec, *rest)
+
+
+def cache_specs(mesh: Mesh, abstract_cache: Any, batch: int) -> Any:
+    return tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(mesh, batch, path, leaf.shape),
+        abstract_cache,
+    )
+
+
+def cache_shardings(mesh: Mesh, abstract_cache: Any, batch: int) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(mesh, abstract_cache, batch),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,62 @@
+"""Activation-sharding context: models call ``constrain(x, ...)`` with
+logical axis tags; a launcher that activates a mesh turns those into
+``with_sharding_constraint`` hints. Without an active mesh (smoke tests,
+single-device examples) constraints are no-ops.
+
+Tags: "dp" (batch → pod+data axes), "tp" (→ model axis), None (replicate).
+Divisibility is checked per-dim, falling back to None — same policy as the
+parameter rules.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.axes import dp_axes, tp_axis, _axis_size
+
+_ACTIVE: ContextVar[Mesh | None] = ContextVar("activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh | None):
+    token = _ACTIVE.set(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def tp_size() -> int:
+    """Size of the active mesh's 'model' axis (1 when no mesh active)."""
+    mesh = _ACTIVE.get()
+    if mesh is None:
+        return 1
+    ax = tp_axis(mesh)
+    return int(mesh.shape[ax]) if ax else 1
+
+
+def constrain(x: jax.Array, *tags: str | None) -> jax.Array:
+    """Apply a sharding hint; no-op without an active mesh."""
+    mesh = _ACTIVE.get()
+    if mesh is None or len(tags) != x.ndim:
+        return x
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    entries = []
+    used: set = set()
+    for tag, dim in zip(tags, x.shape):
+        axis = dp if tag == "dp" else tp if tag == "tp" else None
+        if axis is not None:
+            names = set(axis) if isinstance(axis, tuple) else {axis}
+            if (used & names) or dim % _axis_size(mesh, axis) != 0:
+                axis = None
+            else:
+                used |= names
+        entries.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )

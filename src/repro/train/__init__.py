@@ -1,0 +1,11 @@
+from repro.train.optim import AdamWState, adamw_init, adamw_update, lr_schedule
+from repro.train.step import make_train_step, cross_entropy_loss
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "make_train_step",
+    "cross_entropy_loss",
+]

@@ -1,0 +1,147 @@
+"""AdamW + global-norm clipping + LR schedules, implemented in pure JAX.
+
+First/second moments are kept in a configurable dtype (fp32 default); the
+update math runs in fp32 regardless of param dtype (bf16 params at scale).
+Includes an int8 error-feedback gradient-compression hook for slow cross-pod
+links (DESIGN.md §7) — off by default, exercised in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any, dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    if tc.schedule == "constant":
+        decay = 1.0
+    elif tc.schedule == "linear":
+        frac = jnp.clip(
+            (s - tc.warmup_steps)
+            / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip(
+            (s - tc.warmup_steps)
+            / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * decay
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    tc: TrainConfig,
+) -> tuple[Any, AdamWState, dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(tc, step)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            pf = pf * (1.0 - lr * tc.weight_decay)
+        pf = pf - lr * delta
+        return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), stats
+
+
+# --------------------------------------------------------------------------
+# optional int8 error-feedback gradient compression (cross-pod links)
+# --------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization → (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads_with_feedback(
+    grads: Any, error: Any
+) -> tuple[Any, Any]:
+    """int8-compress (grads + carried error); return (decompressed, new_error).
+
+    The decompressed values are what crosses the slow link; the quantization
+    residual is fed back into the next step (error feedback keeps the update
+    unbiased over time).
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = compress_int8(target)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), target - deq
+
+    pairs = jax.tree.map(one, grads, error)
+    new_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

@@ -1,0 +1,131 @@
+"""Train step: loss, gradient accumulation (microbatching), remat, metrics.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) →
+(params, opt_state, metrics) function used by both the trainer loop and the
+multi-pod dry-run. Gradient accumulation scans over microbatches so the
+activation working set is bounded at any global batch (the big-arch cells).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, TrainConfig
+from repro.models.registry import Model
+from repro.train.optim import AdamWState, adamw_init, adamw_update
+
+
+def cross_entropy_loss(
+    logits: jax.Array,        # [B, S, V] f32 (vocab axis may be tp-sharded)
+    labels: jax.Array,        # [B, S] i32
+    z_loss: float = 0.0,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # masked-sum instead of take_along_axis: reduces over the (sharded)
+    # vocab axis without gathering the full logits to one shard
+    hit = jnp.arange(logits.shape[-1])[None, None, :] == labels[..., None]
+    picked = jnp.where(hit, logits, 0.0).sum(axis=-1)
+    nll = (lse - picked).mean()
+    metrics = {"ce": nll}
+    if z_loss > 0.0:
+        zl = z_loss * jnp.square(lse).mean()
+        nll = nll + zl
+        metrics["z_loss"] = zl
+    return nll, metrics
+
+
+def make_loss_fn(model: Model, tc: TrainConfig,
+                 unroll: bool = False) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch, remat=tc.remat,
+                                  unroll=unroll)
+        loss, metrics = cross_entropy_loss(
+            logits, batch["labels"], tc.z_loss
+        )
+        if model.cfg.n_experts > 0:
+            loss = loss + tc.moe_aux_weight * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """[B, ...] → [n, B//n, ...] on every batch-led leaf; mrope is [3,B,S]."""
+
+    def one(path_is_mrope, x):
+        if path_is_mrope:
+            b = x.shape[1]
+            return x.reshape(x.shape[0], n, b // n, *x.shape[2:]).swapaxes(0, 1)
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return {
+        k: one(k == "mrope_pos", v) for k, v in batch.items()
+    }
+
+
+def make_train_step(
+    model: Model, tc: TrainConfig, unroll: bool = False
+) -> Callable[[Any, AdamWState, dict], tuple[Any, AdamWState, dict]]:
+    """``unroll=True`` python-unrolls both the layer stack and the
+    microbatch-accumulation loop (dry-run coster; scan trip counts are
+    invisible to HLO cost analysis)."""
+    loss_fn = make_loss_fn(model, tc, unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        if tc.microbatches > 1:
+            mb = _split_microbatches(batch, tc.microbatches)
+
+            def body(carry, mbatch):
+                acc, metrics_acc = carry
+                (_, metrics), grads = grad_fn(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+                return (acc, metrics_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            zero_m = jax.eval_shape(
+                lambda p, b: grad_fn(p, b)[0][1], params,
+                jax.tree.map(lambda x: x[0], mb),
+            )
+            zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), zero_m)
+            if unroll:
+                carry = (zero_g, zero_m)
+                for i in range(tc.microbatches):
+                    carry, _ = body(
+                        carry, jax.tree.map(lambda x, i=i: x[i], mb)
+                    )
+                grads, metrics = carry
+            else:
+                (grads, metrics), _ = jax.lax.scan(
+                    body, (zero_g, zero_m), mb
+                )
+            inv = 1.0 / tc.microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, stats = adamw_update(grads, opt_state, params, tc)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def abstract_train_state(model: Model, tc: TrainConfig):
+    """(params, opt_state) as ShapeDtypeStructs — dry-run path, no alloc."""
+    params = model.abstract_params()
+    opt_state = jax.eval_shape(
+        functools.partial(adamw_init, dtype=tc.opt_state_dtype), params
+    )
+    return params, opt_state

@@ -1,0 +1,88 @@
+"""Trainer loop: data feed, jitted step, checkpointing, restart.
+
+The loop is deliberately small — all heavy lifting is in ``make_train_step``
+(jit) and ``CheckpointManager`` (async I/O). Restart resumes from the latest
+checkpoint including the data cursor, so a killed job continues bit-exact
+(the training-side mirror of the sweep engine's fault tolerance).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.config.base import TrainConfig
+from repro.models.registry import Model
+from repro.train.optim import adamw_init
+from repro.train.step import make_train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        tc: TrainConfig,
+        data: Iterator[dict],
+        ckpt_dir: str | None = None,
+        ckpt_every: int = 50,
+        log_every: int = 10,
+        log_fn: Callable[[str], None] = print,
+    ) -> None:
+        self.model = model
+        self.tc = tc
+        self.data = data
+        self.step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.log = log_fn
+        self.history: list[dict] = []
+
+    def init_state(self):
+        params = self.model.init(jax.random.key(self.tc.seed))
+        opt_state = adamw_init(params, self.tc.opt_state_dtype)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        params, opt_state, start = self.init_state()
+        if self.ckpt is not None and self.ckpt.has_checkpoint():
+            (params, opt_state), meta = self.ckpt.restore(
+                like=(params, opt_state)
+            )
+            start = int(meta["step"])
+            self.log(f"[trainer] restored checkpoint at step {start}")
+        return params, opt_state, start
+
+    def run(self, steps: int | None = None):
+        params, opt_state, start = self.restore_or_init()
+        total = steps if steps is not None else self.tc.total_steps
+        t0 = time.perf_counter()
+        for step in range(start, total):
+            batch = next(self.data)
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch
+            )
+            if (step + 1) % self.log_every == 0 or step + 1 == total:
+                m = {
+                    k: float(jax.device_get(v))
+                    for k, v in metrics.items()
+                }
+                dt = time.perf_counter() - t0
+                m["steps_per_s"] = (step + 1 - start) / dt
+                self.history.append({"step": step + 1, **m})
+                self.log(
+                    f"[trainer] step {step+1}/{total} "
+                    f"loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                    f"gnorm={m['grad_norm']:.3f} "
+                    f"({m['steps_per_s']:.2f} it/s)"
+                )
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, (params, opt_state))
+        if self.ckpt is not None:
+            self.ckpt.save(total, (params, opt_state))
+            self.ckpt.wait()
+        return params, opt_state

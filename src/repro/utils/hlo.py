@@ -1,0 +1,152 @@
+"""Parse compiled HLO text for collective traffic — the §Roofline collective term.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but not
+collective traffic, so we parse the post-SPMD-partitioning HLO dump and sum
+the bytes moved per device for every collective op, using standard
+ring-algorithm wire formulas:
+
+    all-gather          : out_bytes      * (n-1)/n
+    reduce-scatter      : in_bytes       * (n-1)/n
+    all-reduce          : 2 * out_bytes  * (n-1)/n      (RS + AG)
+    all-to-all          : out_bytes      * (n-1)/n
+    collective-permute  : out_bytes                      (full buffer hop)
+
+Shapes in partitioned HLO are already per-device, so the formulas give wire
+bytes per device directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one shape like  bf16[16,4096,3584]{2,1,0}  or  f32[] or pred[4]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+# op line:  %name = <shape-or-tuple> <op>(...operands...), ... replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<variant>-start)?\("
+    r"(?P<operands>[^)]*)\)"
+)
+
+# explicit groups: replica_groups={{0,1,2},{3,4,5}}
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota v2 form: replica_groups=[32,16]<=[512]  → group size is 2nd entry
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every shape literal appearing in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")], dtype=np.int64))
+        else:
+            n = 1
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        entries = [e for e in m.group(1).split(",") if e.strip() != ""]
+        return max(len(entries), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Collective traffic summary for one compiled executable."""
+
+    counts: dict[str, int]
+    payload_bytes: dict[str, int]  # raw buffer bytes per op kind
+    wire_bytes: dict[str, float]   # ring-model wire bytes per device
+    total_wire_bytes: float
+
+    def summary(self) -> str:
+        lines = [f"total wire bytes/device: {self.total_wire_bytes:,.0f}"]
+        for op in sorted(self.counts):
+            lines.append(
+                f"  {op:<20s} n={self.counts[op]:<4d} "
+                f"payload={self.payload_bytes[op]:,} wire={self.wire_bytes[op]:,.0f}"
+            )
+        return "\n".join(lines)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Parse HLO text and compute per-device collective wire traffic."""
+    counts: dict[str, int] = defaultdict(int)
+    payload: dict[str, int] = defaultdict(int)
+    wire: dict[str, float] = defaultdict(float)
+
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        # skip the -done halves of async pairs; -start carries the shapes
+        if f"{op}-done" in line:
+            continue
+        out_bytes = _shape_bytes(m.group("out"))
+        in_bytes = _shape_bytes(m.group("operands"))
+        n = _group_size(line)
+        if op == "all-gather":
+            pay = out_bytes
+            w = out_bytes * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            pay = in_bytes
+            w = in_bytes * (n - 1) / max(n, 1)
+        elif op == "all-reduce":
+            # async -start output can be a (in, out) tuple; use operand bytes
+            pay = in_bytes if m.group("variant") else out_bytes
+            w = 2.0 * pay * (n - 1) / max(n, 1)
+        elif op == "all-to-all":
+            pay = out_bytes
+            w = out_bytes * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            pay = out_bytes
+            w = float(out_bytes)
+        counts[op] += 1
+        payload[op] += pay
+        wire[op] += w
+
+    return CollectiveStats(
+        counts=dict(counts),
+        payload_bytes=dict(payload),
+        wire_bytes=dict(wire),
+        total_wire_bytes=float(sum(wire.values())),
+    )

@@ -1,0 +1,47 @@
+"""Wall-clock timing helper for benchmarks (CPU-host measurements only)."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+class Timer:
+    """Accumulating timer; ``with timer.measure(): ...`` adds one sample."""
+
+    def __init__(self) -> None:
+        self.samples: list[float] = []
+
+    @contextmanager
+    def measure(self):
+        t0 = time.perf_counter()
+        yield
+        self.samples.append(time.perf_counter() - t0)
+
+    @property
+    def total(self) -> float:
+        return sum(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return self.total / len(self.samples) if self.samples else 0.0
+
+    @property
+    def best(self) -> float:
+        return min(self.samples) if self.samples else 0.0
+
+    def us_per_call(self) -> float:
+        return self.best * 1e6
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Best-of-``iters`` seconds for ``fn(*args)``, blocking on the result."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t = Timer()
+    for _ in range(iters):
+        with t.measure():
+            jax.block_until_ready(fn(*args))
+    return t.best

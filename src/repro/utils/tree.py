@@ -1,0 +1,54 @@
+"""Small pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _leaf_bytes(x: Any) -> int:
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    return sum(_leaf_bytes(x) for x in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total element count of all array leaves."""
+    return sum(
+        int(np.prod(getattr(x, "shape", ()), dtype=np.int64))
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree to (path-string, leaf) pairs."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(path), leaf) for path, leaf in leaves]
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_string, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )

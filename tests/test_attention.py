@@ -1,0 +1,92 @@
+"""Attention internals: tiled flash_xla vs plain sdpa, masks, MLA decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    sdpa,
+    flash_xla,
+    full_attention,
+    causal_mask,
+)
+
+
+@pytest.mark.parametrize("causal,window", [
+    (True, 0), (True, 64), (False, 0),
+])
+def test_flash_xla_matches_sdpa(causal, window):
+    """The statically-tiled flash path must equal plain softmax attention."""
+    b, s, h, kh, d = 2, 256, 4, 2, 32
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+    out = flash_xla(
+        q, k, v, causal=causal, window=window, scale=d**-0.5,
+        tile_q=64, tile_k=64,
+    )
+    mask = causal_mask(s, s, window) if causal else None
+    ref = sdpa(q, k, v, mask, d**-0.5)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_flash_xla_softcap():
+    b, s, h, d = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    out = flash_xla(q, k, v, causal=True, window=0, scale=d**-0.5,
+                    cap=30.0, tile_q=32, tile_k=32)
+    ref = sdpa(q, k, v, causal_mask(s, s), d**-0.5, 30.0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_full_attention_dispatches_small_seq_exactly():
+    b, s, h, d = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    out = full_attention(q, k, v, causal=True, window=0, scale=d**-0.5)
+    ref = sdpa(q, k, v, causal_mask(s, s), d**-0.5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_flash_xla_window_skips_are_correct():
+    """Window smaller than a tile: early tiles fully outside must not
+    contribute (exercises the static skip logic)."""
+    b, s, h, d = 1, 512, 1, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    out = flash_xla(q, k, v, causal=True, window=32, scale=d**-0.5,
+                    tile_q=128, tile_k=128)
+    ref = sdpa(q, k, v, causal_mask(s, s, 32), d**-0.5)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_flash_xla_grad_finite():
+    """The tiled path must be differentiable (training uses it at 4k)."""
+    b, s, h, d = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+
+    def f(q):
+        return flash_xla(q, k, v, causal=True, window=0, scale=d**-0.5,
+                         tile_q=32, tile_k=32).sum()
+
+    g = jax.grad(f)(q)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).max()) > 0

@@ -1,0 +1,84 @@
+"""Checkpoint I/O: roundtrip, atomicity, retention, dtype restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointManager, save_pytree, load_pytree, latest_step
+from repro.ckpt.io import load_meta
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "w": jax.random.normal(k, (4, 8), jnp.float32),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+        "scalar": jnp.float32(3.5),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(str(tmp_path / "c"), tree, meta={"step": 7})
+    out = load_pytree(str(tmp_path / "c"), like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert load_meta(str(tmp_path / "c"))["step"] == 7
+
+
+def test_roundtrip_with_shapedtypestruct_like(tmp_path):
+    tree = _tree()
+    save_pytree(str(tmp_path / "c"), tree)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+    out = load_pytree(str(tmp_path / "c"), like=like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path / "c"), _tree())
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "c"), like={"only": jnp.zeros(3)})
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, _tree(s))
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_000000003", "step_000000004"]
+    restored, meta = mgr.restore(like=_tree())
+    assert meta["step"] == 4
+    for a, b in zip(jax.tree.leaves(_tree(4)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_async_write_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(10, _tree(10))
+    restored, meta = mgr.restore(like=_tree())  # restore barriers on writer
+    assert meta["step"] == 10
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 5), st.integers(1, 5)),
+    dtype=st.sampled_from(["float32", "int32", "bfloat16"]),
+)
+def test_property_any_shape_dtype_roundtrips(tmp_path_factory, shape, dtype):
+    tmp = tmp_path_factory.mktemp("ck")
+    x = jnp.ones(shape, dtype=dtype) * 3
+    save_pytree(str(tmp / "c"), {"x": x})
+    out = load_pytree(str(tmp / "c"), like={"x": x})
+    np.testing.assert_array_equal(
+        np.asarray(out["x"], dtype=np.float32),
+        np.asarray(x, dtype=np.float32),
+    )
+    assert out["x"].dtype == x.dtype

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures: instantiate the REDUCED config of
+the same family, run one forward/train step on CPU, assert output shapes and
+no NaNs. Also exercises one prefill+decode step per arch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.configs import ALL_ARCHS
+from repro.models import build_model
+from repro.models.frontends import audio_frames_stub, vision_stream_stub
+
+B, S = 2, 32
+
+
+def _batch(model, key):
+    cfg = model.cfg
+    if cfg.is_encdec:
+        return {
+            "frames": audio_frames_stub(key, cfg, B, cfg.enc_ctx),
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.mrope_sections:
+        tokens, mrope = vision_stream_stub(key, cfg, B, S)
+        return {"tokens": tokens, "mrope_pos": mrope}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(model, jax.random.key(1))
+    logits, aux = jax.jit(model.apply)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+    if cfg.n_experts > 0:
+        assert float(aux) > 0.0  # load-balance loss engaged
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    """One gradient step moves the loss (tests autodiff through every family)."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(model, jax.random.key(1))
+    labels = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        logits, aux = model.apply(p, batch, remat="full")
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+    )
+    assert float(gnorm) > 0.0 and np.isfinite(float(gnorm))
+
+    # SGD step reduces this batch's loss
+    lr = 0.5
+    params2 = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype),
+        params, grads,
+    )
+    loss2 = jax.jit(loss_fn)(params2)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(model, jax.random.key(1))
+    max_seq = S + 8
+    cache = model.init_cache(B, max_seq)
+    logits, cache = jax.jit(model.prefill)(params, cache, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    nxt = jnp.argmax(logits, axis=-1)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits2, cache = jax.jit(model.decode)(params, cache, nxt, pos)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize(
+    "arch", ["gemma2-2b", "rwkv6-3b", "recurrentgemma-2b", "minicpm3-4b"]
+)
+def test_decode_matches_full_forward(arch):
+    """Token-by-token decode must reproduce the teacher-forced forward."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (1, 12), 0, cfg.vocab_size)
+    full_logits, _ = jax.jit(model.apply)(params, {"tokens": tokens})
+
+    cache = model.init_cache(1, 16)
+    step = jax.jit(model.decode)
+    logits_seq = []
+    for t in range(12):
+        logits, cache = step(
+            params, cache, tokens[:, t], jnp.array([t], jnp.int32)
+        )
+        logits_seq.append(logits)
+    dec = jnp.stack(logits_seq, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full_logits), rtol=2e-2, atol=2e-2
+    )

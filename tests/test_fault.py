@@ -1,0 +1,118 @@
+"""Fault tolerance: injected node failures, checkpoint/restart, elastic remesh.
+
+Reproduces the paper's §5.2 claim — 100 % completion — under conditions the
+paper never tested: nodes dying mid-slice and restarts from disk.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import SimConfig
+from repro.core.fault import FailureInjector, run_with_failures, revert_instances
+from repro.core.sweep import SweepConfig, SweepRunner, completion_rate
+
+SIM = SimConfig(n_slots=16)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_instances=8,
+        steps_per_instance=120,
+        chunk_steps=40,
+        sim=SIM,
+        seed=11,
+    )
+    base.update(kw)
+    return SweepConfig(**base)
+
+
+def test_failures_still_reach_full_completion():
+    runner = SweepRunner(_cfg())
+    injector = FailureInjector(n_workers=4, plan={0: [1], 1: [0, 3], 3: [2]})
+    state, info = run_with_failures(runner, injector)
+    assert info["completion_rate"] == 1.0
+    assert len(info["failure_events"]) == 3
+    # failures force extra chunks beyond the failure-free 3
+    assert info["chunks_run"] > 3
+
+
+def test_failed_run_metrics_match_clean_run():
+    """Re-executed instances produce byte-identical results (determinism)."""
+    clean = SweepRunner(_cfg()).run()
+    runner = SweepRunner(_cfg())
+    injector = FailureInjector(n_workers=4, plan={0: [0], 2: [1, 2]})
+    state, info = run_with_failures(runner, injector)
+    assert info["completion_rate"] == 1.0
+    for a, b in zip(jax.tree.leaves(clean.metrics),
+                    jax.tree.leaves(state.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_random_failure_storm_completes():
+    runner = SweepRunner(_cfg(n_instances=6))
+    injector = FailureInjector.random(
+        n_workers=3, n_chunks=4, fail_prob=0.4, seed=5
+    )
+    state, info = run_with_failures(runner, injector, max_chunks=60)
+    assert info["completion_rate"] == 1.0
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    cfg = _cfg()
+    ckpt = CheckpointManager(str(tmp_path / "sweep"), async_write=False)
+    runner = SweepRunner(cfg)
+
+    # run only the first chunk, checkpointing
+    state = runner.init()
+    state = runner.run_chunk(state)
+    ckpt.save(int(jax.device_get(state.chunk)), state)
+
+    # "job killed" — fresh runner restores from disk and finishes
+    runner2 = SweepRunner(cfg)
+    injector = FailureInjector(n_workers=4, plan={})
+    state2, info = run_with_failures(runner2, injector, ckpt=ckpt)
+    assert info["completion_rate"] == 1.0
+
+    # equal to a never-interrupted run
+    clean = SweepRunner(cfg).run()
+    for a, b in zip(jax.tree.leaves(clean.metrics),
+                    jax.tree.leaves(state2.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_revert_instances_partial():
+    runner = SweepRunner(_cfg())
+    s0 = runner.init()
+    s1 = runner.run_chunk(s0)
+    mask = np.zeros(8, bool)
+    mask[:4] = True
+    reverted = revert_instances(s1, s0, mask)
+    t = np.asarray(jax.device_get(reverted.sim.t))
+    assert (t[:4] == 0).all()          # reverted to snapshot
+    assert (t[4:] == 40).all()         # kept chunk progress
+
+
+def test_elastic_remesh_noop_on_single_device():
+    """Remesh keeps logical state intact (single-device degenerate case)."""
+    def to_np(x):
+        if jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key):
+            x = jax.random.key_data(x)
+        return np.asarray(jax.device_get(x))
+
+    runner = SweepRunner(_cfg())
+    state = runner.init()
+    state = runner.run_chunk(state)
+    before = jax.tree.map(to_np, state)
+    mesh = jax.make_mesh((1,), ("workers",))
+    state2 = runner.remesh(state, mesh)
+    after = jax.tree.map(to_np, state2)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+    # and the sweep still completes on the new mesh
+    final = runner.run(state2)
+    assert completion_rate(final) == 1.0

@@ -1,0 +1,175 @@
+"""Unit + property tests for the IDM/MOBIL highway-merge simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SimConfig,
+    sample_scenario_params,
+    init_state,
+    sim_step,
+    rollout,
+)
+from repro.core.simulator import idm_accel, neighbor_info, SimMetrics
+from repro.core.scenario import ScenarioParams
+
+CFG = SimConfig(n_slots=16)
+
+
+def _params(key=1):
+    return sample_scenario_params(jax.random.key(key), CFG)
+
+
+# ---------------------------------------------------------------- IDM unit
+
+def test_idm_free_road_accelerates():
+    a = idm_accel(
+        v=jnp.float32(10.0), dv=jnp.float32(0.0), gap=jnp.float32(1e9),
+        v0=jnp.float32(30.0), T=jnp.float32(1.5), a_max=jnp.float32(1.4),
+        b_comf=jnp.float32(2.0), s0=jnp.float32(2.0),
+    )
+    assert float(a) > 1.0  # nearly a_max when far below v0 with no lead
+
+
+def test_idm_at_desired_speed_no_accel():
+    a = idm_accel(
+        v=jnp.float32(30.0), dv=jnp.float32(0.0), gap=jnp.float32(1e9),
+        v0=jnp.float32(30.0), T=jnp.float32(1.5), a_max=jnp.float32(1.4),
+        b_comf=jnp.float32(2.0), s0=jnp.float32(2.0),
+    )
+    assert abs(float(a)) < 1e-3
+
+
+def test_idm_close_gap_brakes():
+    a = idm_accel(
+        v=jnp.float32(30.0), dv=jnp.float32(10.0), gap=jnp.float32(5.0),
+        v0=jnp.float32(30.0), T=jnp.float32(1.5), a_max=jnp.float32(1.4),
+        b_comf=jnp.float32(2.0), s0=jnp.float32(2.0),
+    )
+    assert float(a) < -4.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    v=st.floats(0.0, 40.0),
+    gap=st.floats(0.5, 500.0),
+    dv=st.floats(-10.0, 10.0),
+)
+def test_idm_bounded_above_by_amax(v, gap, dv):
+    a = idm_accel(
+        jnp.float32(v), jnp.float32(dv), jnp.float32(gap),
+        jnp.float32(30.0), jnp.float32(1.5), jnp.float32(1.4),
+        jnp.float32(2.0), jnp.float32(2.0),
+    )
+    assert float(a) <= 1.4 + 1e-5
+
+
+# ------------------------------------------------------------- neighbors
+
+def test_neighbor_info_basic():
+    pos = jnp.array([0.0, 50.0, 100.0, 30.0], jnp.float32)
+    lane = jnp.array([0, 0, 0, 1], jnp.int32)
+    active = jnp.ones(4, bool)
+    li, lg, hl, fi, fg, hf = neighbor_info(pos, lane, active, 4.5, lane)
+    # vehicle 0's lead is 1 (gap 45.5); vehicle 1's lead is 2
+    assert int(li[0]) == 1 and abs(float(lg[0]) - 45.5) < 1e-4
+    assert int(li[1]) == 2
+    assert not bool(hl[2])  # front of lane 0
+    assert not bool(hl[3])  # alone in lane 1
+    assert bool(hf[1]) and int(fi[1]) == 0
+
+
+def test_neighbor_ignores_inactive():
+    pos = jnp.array([0.0, 50.0], jnp.float32)
+    lane = jnp.array([0, 0], jnp.int32)
+    active = jnp.array([True, False])
+    _, _, hl, _, _, _ = neighbor_info(pos, lane, active, 4.5, lane)
+    assert not bool(hl[0])
+
+
+# ------------------------------------------------------------- step/rollout
+
+def test_step_preserves_shapes_and_finiteness():
+    st0 = init_state(CFG, jax.random.key(0))
+    sp = _params()
+    st1, d = jax.jit(lambda s: sim_step(s, CFG, sp))(st0)
+    for a, b in zip(jax.tree.leaves(st0), jax.tree.leaves(st1)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    for leaf in jax.tree.leaves(d):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_rollout_spawns_and_moves_traffic():
+    sp = _params()
+    m = rollout(jax.random.key(0), CFG, sp, 400)
+    assert int(m.spawned) > 0
+    assert float(m.speed_sum) > 0
+    assert int(m.steps) == 400
+
+
+def test_rollout_deterministic():
+    sp = _params()
+    m1 = rollout(jax.random.key(7), CFG, sp, 200)
+    m2 = rollout(jax.random.key(7), CFG, sp, 200)
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollout_seed_sensitivity():
+    sp = _params()
+    m1 = rollout(jax.random.key(1), CFG, sp, 400)
+    m2 = rollout(jax.random.key(2), CFG, sp, 400)
+    diff = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2))
+    )
+    assert diff  # randomized instances must deviate (the paper's premise)
+
+
+def test_speeds_stay_physical():
+    """No vehicle exceeds ~max desired speed; none go backwards."""
+    sp = _params()
+    st = init_state(CFG, jax.random.key(3))
+    step = jax.jit(lambda s: sim_step(s, CFG, sp))
+    for _ in range(300):
+        st, _ = step(st)
+    vel = np.asarray(st.vel)[np.asarray(st.active)]
+    if vel.size:
+        assert vel.min() >= 0.0
+        assert vel.max() <= 40.0
+
+
+def test_vehicles_stay_on_road():
+    sp = _params()
+    st = init_state(CFG, jax.random.key(4))
+    step = jax.jit(lambda s: sim_step(s, CFG, sp))
+    for _ in range(300):
+        st, _ = step(st)
+    act = np.asarray(st.active)
+    lane = np.asarray(st.lane)[act]
+    pos = np.asarray(st.pos)[act]
+    assert np.all((lane >= 0) & (lane <= CFG.n_lanes))
+    assert np.all(pos <= CFG.road_len + 1.0)
+    # ramp vehicles never pass the ramp end
+    on_ramp = lane == CFG.n_lanes
+    assert np.all(pos[on_ramp] <= CFG.merge_end + 1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_property_conservation_of_vehicles(seed):
+    """spawned == exited + crashed + still-active (no vehicle lost)."""
+    sp = _params()
+    st = init_state(CFG, jax.random.key(seed))
+    m = SimMetrics.zeros()
+    step = jax.jit(lambda s: sim_step(s, CFG, sp))
+    from repro.core.simulator import _acc
+
+    for _ in range(150):
+        st, d = step(st)
+        m = jax.jit(_acc)(m, d)
+    active_now = int(np.asarray(st.active).sum())
+    assert int(m.spawned) == int(m.throughput) + int(m.collisions) + active_now

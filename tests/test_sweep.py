@@ -1,0 +1,109 @@
+"""Sweep engine tests: completion, chunking invariance, compaction, tokens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig
+from repro.core.sweep import SweepConfig, SweepRunner, completion_rate
+from repro.core.tokens import (
+    record_rollout,
+    trajectory_to_tokens,
+    sweep_token_dataset,
+    vocab_size,
+    BOS, EOS, SEP,
+)
+from repro.core.aggregate import aggregate_metrics, metrics_to_records
+from repro.core.scenario import sample_scenario_params
+
+SIM = SimConfig(n_slots=16)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_instances=6,
+        steps_per_instance=120,
+        chunk_steps=40,
+        sim=SIM,
+        seed=3,
+    )
+    base.update(kw)
+    return SweepConfig(**base)
+
+
+def test_sweep_runs_to_completion():
+    runner = SweepRunner(_cfg())
+    state = runner.run()
+    assert completion_rate(state) == 1.0
+    assert int(jax.device_get(state.chunk)) == 3  # 120/40
+
+
+def test_sweep_chunk_size_invariance():
+    """Results must not depend on the walltime-slice size (checkpointable)."""
+    s1 = SweepRunner(_cfg(chunk_steps=40)).run()
+    s2 = SweepRunner(_cfg(chunk_steps=120)).run()
+    s3 = SweepRunner(_cfg(chunk_steps=24)).run()
+    for a, b in zip(jax.tree.leaves(s1.metrics), jax.tree.leaves(s2.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s1.metrics), jax.tree.leaves(s3.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sweep_compaction_matches_plain():
+    """Straggler compaction is an optimization, never a semantic change."""
+    varied = dict(vary_horizon=True, min_horizon_frac=0.3)
+    s1 = SweepRunner(_cfg(compaction=True, **varied)).run()
+    s2 = SweepRunner(_cfg(compaction=False, **varied)).run()
+    for a, b in zip(jax.tree.leaves(s1.metrics), jax.tree.leaves(s2.metrics)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert completion_rate(s1) == 1.0
+
+
+def test_sweep_variable_horizons_complete():
+    runner = SweepRunner(_cfg(vary_horizon=True, min_horizon_frac=0.25))
+    state = runner.run()
+    assert completion_rate(state) == 1.0
+    t = np.asarray(jax.device_get(state.sim.t))
+    h = np.asarray(jax.device_get(state.horizon))
+    assert np.all(t >= h)  # every instance reached its own horizon
+
+
+def test_aggregate_and_records():
+    runner = SweepRunner(_cfg())
+    state = runner.run()
+    summary = aggregate_metrics(state.metrics)
+    assert summary["instances"] == 6
+    assert summary["total_sim_steps"] == 6 * 120
+    recs = metrics_to_records(state.metrics, state.params)
+    assert len(recs) == 6
+    assert all("p_cav" in r and 0.0 <= r["p_cav"] <= 1.0 for r in recs)
+
+
+def test_token_stream_roundtrip_structure():
+    key = jax.random.key(0)
+    sp = sample_scenario_params(jax.random.key(1), SIM)
+    _, traj = record_rollout(key, sp, SIM, n_steps=50, record_every=10,
+                             k_slots=8)
+    toks = trajectory_to_tokens(traj, SIM)
+    toks = np.asarray(toks)
+    assert toks[0] == BOS and toks[-1] == EOS
+    assert (toks < vocab_size(SIM)).all() and (toks >= 0).all()
+    # 5 frames x (8 vehicle tokens + SEP) + BOS + EOS
+    assert toks.shape[0] == 5 * 9 + 2
+    assert (toks == SEP).sum() == 5
+
+
+def test_sweep_token_dataset_shapes():
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(0), i))(
+        jnp.arange(3)
+    )
+    params = jax.vmap(
+        lambda k: sample_scenario_params(k, SIM)
+    )(keys)
+    ds = sweep_token_dataset(keys, params, SIM, n_steps=40, record_every=10,
+                             k_slots=4)
+    assert ds.shape[0] == 3
+    assert ds.shape[1] == 4 * 5 + 2  # 4 frames x (4+1) + BOS/EOS
+    # instances deviate (the paper's randomization premise)
+    assert not np.array_equal(np.asarray(ds[0]), np.asarray(ds[1]))
