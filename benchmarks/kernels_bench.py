@@ -56,3 +56,29 @@ def run() -> None:
     tr = timeit(roll, jax.random.key(2))
     emit("sim_rollout_500steps_64veh", tr * 1e6,
          f"{500/tr:.0f}_steps_per_s {500*64/tr:.0f}_veh_steps_per_s")
+
+    # neighborhood-engine table build: the fused pass that replaced the
+    # ~8 independent O(N²) scans per sim_step (one build serves them all)
+    from repro.core.neighbors import build_tables
+
+    n_lanes_total = cfg.n_lanes + 1
+    for n in (48, 128, 512):
+        ks = jax.random.split(jax.random.key(3), 3)
+        pos = jax.random.uniform(ks[0], (n,), jnp.float32, 0.0, 900.0)
+        lane = jax.random.randint(ks[1], (n,), 0, n_lanes_total)
+        active = jax.random.uniform(ks[2], (n,)) < 0.8
+        base = None
+        for impl in ("reference", "dense", "sort"):
+            # inputs passed at call time so XLA cannot constant-fold them
+            fn = jax.jit(
+                lambda p, l, a, impl=impl: build_tables(
+                    p, l, a, cfg.vehicle_len, n_lanes_total, impl
+                )
+            )
+            t = timeit(fn, pos, lane, active)
+            base = t if base is None else base
+            emit(
+                f"neighbor_tables_{impl}_n{n}", t * 1e6,
+                f"per_lane_tables=[{n_lanes_total},{n}] "
+                f"speedup_vs_reference={base/t:.2f}x",
+            )

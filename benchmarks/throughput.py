@@ -77,3 +77,27 @@ def run() -> None:
         f"vectorization_speedup={speedup:.1f}x "
         f"runs_per_12h_this_host={int(12*3600/ (tn / N_BATCH)):,}",
     )
+
+    # ---- 3. neighborhood engine: per-implementation step rate ----------
+    # "reference" is the per-query O(N²) scan family the seed used; dense /
+    # sort / pallas are the fused engine paths (repro.core.neighbors).
+    impls = ["reference", "dense", "sort"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")   # interpret mode off-TPU is not a timing
+    for n_slots in (48, 128, 512):
+        base = None
+        for impl in impls:
+            icfg = SimConfig(n_slots=n_slots, neighbor_impl=impl)
+            isp = sample_scenario_params(jax.random.key(1), icfg)
+            # key passed at call time so XLA cannot constant-fold the run
+            roll = jax.jit(
+                lambda k, icfg=icfg, isp=isp: rollout(k, icfg, isp, STEPS)
+            )
+            t = timeit(roll, jax.random.key(0))
+            base = t if base is None else base
+            emit(
+                f"neighbor_{impl}_slots{n_slots}", t * 1e6,
+                f"{STEPS/t:.0f}_steps_per_s "
+                f"{STEPS*n_slots/t:.0f}_veh_steps_per_s "
+                f"speedup_vs_reference={base/t:.2f}x",
+            )

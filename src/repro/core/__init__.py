@@ -2,6 +2,8 @@
 
 - :mod:`repro.core.scenario`  — randomized highway-merge scenario generation
   (the ``duarouter --randomize-flows --seed $RANDOM`` analogue).
+- :mod:`repro.core.neighbors` — the single-pass neighborhood engine (fused
+  dense / sort-based / Pallas lead+follower queries behind one API).
 - :mod:`repro.core.simulator` — vectorized IDM+MOBIL merge simulator (the
   Webots+SUMO analogue), jit-compiled chunked rollouts.
 - :mod:`repro.core.sweep`     — the PBS-job-array analogue: instance sharding
@@ -14,6 +16,13 @@
 """
 
 from repro.core.scenario import SimConfig, ScenarioParams, sample_scenario_params
+from repro.core.neighbors import (
+    Neighbors,
+    NeighborTables,
+    build_tables,
+    neighbor_info,
+    query_lanes,
+)
 from repro.core.simulator import (
     SimState,
     SimMetrics,
@@ -27,6 +36,11 @@ __all__ = [
     "SimConfig",
     "ScenarioParams",
     "sample_scenario_params",
+    "Neighbors",
+    "NeighborTables",
+    "build_tables",
+    "neighbor_info",
+    "query_lanes",
     "SimState",
     "SimMetrics",
     "init_state",

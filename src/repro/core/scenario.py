@@ -48,6 +48,13 @@ class SimConfig:
     merge_gap_front: float = 8.0
     merge_gap_rear: float = 10.0
     record_every: int = 0      # 0 = no trajectory recording
+    # neighborhood engine implementation (repro.core.neighbors):
+    # "reference" (per-query O(N²) scans, the parity oracle), "dense"
+    # (fused single-pass O(N²)), "sort" (O(N log N) argsort+searchsorted;
+    # fastest at every measured n_slots on CPU hosts), "pallas" (the
+    # multi-query TPU kernel; interpret mode off-TPU). All four are
+    # bit-for-bit equivalent (tests/test_neighbors.py).
+    neighbor_impl: str = "sort"
 
 
 class ScenarioParams(NamedTuple):

@@ -16,9 +16,33 @@ n nodes" — both collapse into one SPMD program (DESIGN.md §2).
 Shapes are static (fixed ``n_slots`` vehicle capacity, active-masking), so the
 whole rollout jit-compiles into a single ``lax.scan``.
 
-The O(N²) masked neighbor search + IDM evaluation is the physics hot spot and
-has a Pallas TPU kernel (``repro.kernels.idm``); this module is the pure-jnp
-reference path used on CPU and for autodiff.
+The neighbor search + IDM evaluation is the physics hot spot. All per-step
+neighborhood queries (own-lane IDM, the four MOBIL candidate searches, the
+ramp-merge target search, the post-lane-change recompute, and the
+collision/TTC check — historically ~8 independent O(N²) scans) now route
+through the **neighborhood engine** (``repro.core.neighbors``), selected by
+``SimConfig.neighbor_impl``:
+
+- ``"reference"`` — the original per-query masked all-pairs scans (parity
+  oracle; slowest).
+- ``"dense"``     — fused dense path: one ``[N,N]`` pairwise
+  materialization per state snapshot, per-lane tables derived in a single
+  batched reduction; every query becomes an O(N) gather.
+- ``"sort"``      — O(N log N) (default): stable per-lane argsorts of
+  positions per snapshot, queries answered by searchsorted adjacency.
+  Fastest at every measured ``n_slots`` on CPU
+  (see ``benchmarks/throughput.py``).
+- ``"pallas"``    — the generalized multi-query TPU kernel
+  (``repro.kernels.idm.neighbor_kernel``; interpret mode off-TPU).
+
+``sim_step`` performs exactly **two** neighborhood constructions per step:
+one for the pre-move snapshot (serving the own-lane, MOBIL and merge
+queries via lane tables) and one for the post-lane-change snapshot (the
+integration accel). The collision/TTC stage reuses the post-change lead
+assignment with post-integration positions instead of running a third scan:
+each vehicle is checked against the leader it was actually following during
+the dt, which is equivalent up to within-step overtakes (< dt·Δv ≈ cm scale)
+and preserves the crash-on-overlap invariant.
 """
 
 from __future__ import annotations
@@ -33,6 +57,13 @@ from repro.core.scenario import (
     SimConfig,
     ScenarioParams,
     driver_params,
+)
+from repro.core.neighbors import (  # noqa: F401  (neighbor_info re-exported)
+    Neighbors,
+    NeighborTables,
+    build_tables,
+    neighbor_info,
+    query_lanes,
 )
 
 INF = 1e9
@@ -111,36 +142,6 @@ def idm_accel(v, dv, gap, v0, T, a_max, b_comf, s0):
     return a_max * (1.0 - free - (s_star / gap) ** 2)
 
 
-def neighbor_info(pos, lane, active, veh_len, query_lane):
-    """Per-vehicle lead/follower in ``query_lane[i]`` (masked O(N²) search).
-
-    Returns (lead_idx, lead_gap, lead_vel_gather_ok, foll_idx, foll_gap,
-    has_foll). Gaps are bumper-to-bumper.
-    """
-    dpos = pos[None, :] - pos[:, None]                      # [i,j] = pos_j - pos_i
-    n = pos.shape[0]
-    eye = jnp.eye(n, dtype=bool)
-    pair_ok = (
-        (lane[None, :] == query_lane[:, None])
-        & active[None, :]
-        & active[:, None]
-        & ~eye
-    )
-    ahead = pair_ok & (dpos > 0.0)
-    behind = pair_ok & (dpos <= 0.0) & ~ (dpos == 0.0)      # strictly behind
-
-    lead_d = jnp.where(ahead, dpos, INF)
-    lead_idx = jnp.argmin(lead_d, axis=1)
-    lead_gap = jnp.min(lead_d, axis=1) - veh_len
-    has_lead = jnp.any(ahead, axis=1)
-
-    foll_d = jnp.where(behind, -dpos, INF)
-    foll_idx = jnp.argmin(foll_d, axis=1)
-    foll_gap = jnp.min(foll_d, axis=1) - veh_len
-    has_foll = jnp.any(behind, axis=1)
-    return lead_idx, lead_gap, has_lead, foll_idx, foll_gap, has_foll
-
-
 def _own_accel(st: SimState, cfg: SimConfig, query_lane, lead_idx, lead_gap,
                has_lead):
     """IDM accel of each vehicle against its lead in ``query_lane`` +
@@ -164,12 +165,16 @@ def _own_accel(st: SimState, cfg: SimConfig, query_lane, lead_idx, lead_gap,
 # MOBIL lane changing (main lanes) + gap-acceptance ramp merge
 # --------------------------------------------------------------------------
 
-def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own_lead_idx,
-                     own_has_lead, cand_lane):
-    """MOBIL incentive + safety for moving every vehicle to ``cand_lane[i]``."""
-    li, lg, hl, fi, fg, hf = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, cand_lane
-    )
+def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
+                     tabs: NeighborTables, cand_lane):
+    """MOBIL incentive + safety for moving every vehicle to ``cand_lane[i]``.
+
+    ``own`` is the current-lane neighborhood (lead for the old-follower
+    gap, follower as MOBIL's vehicle k); ``tabs`` answers the candidate-lane
+    query — no per-candidate O(N²) scans.
+    """
+    nb = tabs.query(cand_lane)
+    li, lg, hl, fi, fg, hf = nb
     # self in target lane
     a_new = _own_accel(st, cfg, cand_lane, li, lg, hl)
 
@@ -184,11 +189,9 @@ def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own_lead_idx,
 
     # old follower k: before = its current accel (following self);
     # after = following self's current lead
-    _, _, _, ki, kg, hk = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
-    )
-    lead_pos = jnp.where(own_has_lead, st.pos[own_lead_idx], INF)
-    lead_vel = jnp.where(own_has_lead, st.vel[own_lead_idx], 0.0)
+    ki, hk = own.foll_idx, own.has_foll
+    lead_pos = jnp.where(own.has_lead, st.pos[own.lead_idx], INF)
+    lead_vel = jnp.where(own.has_lead, st.vel[own.lead_idx], 0.0)
     gap_k_after = lead_pos[jnp.arange(st.pos.shape[0])] - st.pos[ki] - cfg.vehicle_len
     a_k_before = jnp.where(hk, a_now[ki], 0.0)
     a_k_after = idm_accel(
@@ -206,17 +209,16 @@ def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own_lead_idx,
     return incentive, safe
 
 
-def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, lead_idx,
-                        has_lead):
+def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
+                        tabs: NeighborTables):
     """Simultaneous MOBIL decisions for main-lane vehicles."""
-    n = st.pos.shape[0]
     on_main = (st.lane < cfg.n_lanes) & st.active
     can_change = on_main & (st.cooldown == 0)
 
     left = jnp.minimum(st.lane + 1, cfg.n_lanes - 1)
     right = jnp.maximum(st.lane - 1, 0)
-    inc_l, safe_l = _mobil_candidate(st, cfg, a_now, lead_idx, has_lead, left)
-    inc_r, safe_r = _mobil_candidate(st, cfg, a_now, lead_idx, has_lead, right)
+    inc_l, safe_l = _mobil_candidate(st, cfg, a_now, own, tabs, left)
+    inc_r, safe_r = _mobil_candidate(st, cfg, a_now, own, tabs, right)
     ok_l = safe_l & (inc_l > cfg.mobil_athr) & (left != st.lane) & can_change
     ok_r = safe_r & (inc_r > cfg.mobil_athr) & (right != st.lane) & can_change
 
@@ -230,14 +232,13 @@ def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, lead_idx,
     return new_lane, cooldown, jnp.sum(changed.astype(jnp.int32))
 
 
-def _apply_ramp_merges(st: SimState, cfg: SimConfig, new_lane):
+def _apply_ramp_merges(st: SimState, cfg: SimConfig, new_lane,
+                       tabs: NeighborTables):
     """Gap-acceptance merge from the ramp into lane 0 inside the merge zone."""
     on_ramp = (st.lane == cfg.n_lanes) & st.active
     in_zone = (st.pos >= cfg.merge_start) & (st.pos <= cfg.merge_end)
     zeros = jnp.zeros_like(st.lane)
-    li, lg, hl, fi, fg, hf = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, zeros
-    )
+    _, lg, hl, _, fg, hf = tabs.query(zeros)
     # CAVs accept tighter gaps (cooperative merging)
     front_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_front
     rear_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_rear
@@ -255,55 +256,61 @@ def _apply_ramp_merges(st: SimState, cfg: SimConfig, new_lane):
 # --------------------------------------------------------------------------
 
 def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
-    """Bernoulli(λ·dt) arrivals per lane; claims free slots with fresh drivers."""
+    """Bernoulli(λ·dt) arrivals per lane; claims free slots with fresh drivers.
+
+    Fully vectorized over the ``n_lanes + 1`` spawn lanes: one uniform block
+    for every per-lane draw and a rank-based free-slot allocation, instead
+    of the historical Python loop (~17 tiny PRNG/scatter ops per step —
+    the dominant per-step cost at small ``n_slots``). At most one vehicle
+    spawns per lane per step; each arriving lane claims the next-lowest
+    free slot in lane order, exactly like the sequential loop did.
+    """
     n = st.pos.shape[0]
     n_spawn_lanes = cfg.n_lanes + 1
-    keys = jax.random.split(key, n_spawn_lanes * 4).reshape(n_spawn_lanes, 4)
-    spawned = jnp.zeros((), jnp.int32)
+    lanes = jnp.arange(n_spawn_lanes)
+    ku, kj = jax.random.split(key)
+    u = jax.random.uniform(ku, (3, n_spawn_lanes))   # arrival, cav, v0 jitter
 
-    pos, vel, lane, active = st.pos, st.vel, st.lane, st.active
-    is_cav, v0 = st.is_cav, st.v0
-    T, a_max, b_comf, s0, pol = st.T, st.a_max, st.b_comf, st.s0, st.politeness
+    lam = jnp.concatenate([sp.lambda_main, sp.lambda_ramp[None]])
+    arrive = u[0] < lam * cfg.dt                                   # [L]
+    # headway check at the spawn point, all lanes at once
+    in_lane = st.active[None, :] & (st.lane[None, :] == lanes[:, None])
+    nearest = jnp.min(jnp.where(in_lane, st.pos[None, :], INF), axis=1)
+    clear = nearest > cfg.spawn_gap
 
-    for ln in range(n_spawn_lanes):
-        k_arr, k_cav, k_v, k_jit = keys[ln]
-        lam = sp.lambda_ramp if ln == cfg.n_lanes else sp.lambda_main[ln]
-        arrive = jax.random.uniform(k_arr, ()) < lam * cfg.dt
-        # headway check at the spawn point
-        in_lane = active & (lane == ln)
-        nearest = jnp.min(jnp.where(in_lane, pos, INF))
-        clear = nearest > cfg.spawn_gap
-        free = ~active
-        slot = jnp.argmax(free)
-        ok = arrive & clear & jnp.any(free)
+    # rank-based slot claim: the r-th lane that wants to spawn takes the
+    # r-th-lowest free slot; lanes beyond the free-slot count miss out
+    free = ~st.active
+    n_free = jnp.sum(free.astype(jnp.int32))
+    want = arrive & clear
+    rank = jnp.cumsum(want.astype(jnp.int32)) - want.astype(jnp.int32)
+    ok = want & (rank < n_free)
+    free_slots = jnp.argsort(~free, stable=True)     # free indices first
+    slot = jnp.where(ok, free_slots[jnp.minimum(rank, n - 1)], n)  # n = drop
 
-        cav = jax.random.uniform(k_cav, ()) < sp.p_cav
-        base_v0 = jnp.where(ln == cfg.n_lanes, sp.v0_ramp, sp.v0_mean)
-        new_v0 = base_v0 * jax.random.uniform(k_v, (), minval=0.9, maxval=1.1)
-        dp = driver_params(cav[None], k_jit, 1)
+    cav = u[1] < sp.p_cav
+    base_v0 = jnp.where(lanes == cfg.n_lanes, sp.v0_ramp, sp.v0_mean)
+    new_v0 = base_v0 * (0.9 + 0.2 * u[2])
+    dp = driver_params(cav, kj, n_spawn_lanes)
+    init_v = jnp.minimum(new_v0, nearest / jnp.maximum(st.T[jnp.minimum(slot, n - 1)], 0.5))
 
-        def put(arr, val):
-            return arr.at[slot].set(jnp.where(ok, val, arr[slot]))
-
-        init_v = jnp.minimum(new_v0, nearest / jnp.maximum(st.T[slot], 0.5))
-        pos = put(pos, 0.0)
-        vel = put(vel, jnp.maximum(init_v * 0.8, 5.0))
-        lane = put(lane, ln)
-        is_cav = put(is_cav, cav)
-        v0 = put(v0, new_v0)
-        T = put(T, dp["T"][0])
-        a_max = put(a_max, dp["a_max"][0])
-        b_comf = put(b_comf, dp["b_comf"][0])
-        s0 = put(s0, dp["s0"][0])
-        pol = put(pol, dp["politeness"][0])
-        active = active.at[slot].set(jnp.where(ok, True, active[slot]))
-        spawned = spawned + ok.astype(jnp.int32)
+    def put(arr, val):
+        return arr.at[slot].set(val.astype(arr.dtype), mode="drop")
 
     st = st._replace(
-        pos=pos, vel=vel, lane=lane, active=active, is_cav=is_cav,
-        v0=v0, T=T, a_max=a_max, b_comf=b_comf, s0=s0, politeness=pol,
+        pos=put(st.pos, jnp.zeros_like(new_v0)),
+        vel=put(st.vel, jnp.maximum(init_v * 0.8, 5.0)),
+        lane=put(st.lane, lanes),
+        active=put(st.active, jnp.ones_like(cav)),
+        is_cav=put(st.is_cav, cav),
+        v0=put(st.v0, new_v0),
+        T=put(st.T, dp["T"]),
+        a_max=put(st.a_max, dp["a_max"]),
+        b_comf=put(st.b_comf, dp["b_comf"]),
+        s0=put(st.s0, dp["s0"]),
+        politeness=put(st.politeness, dp["politeness"]),
     )
-    return st, spawned
+    return st, jnp.sum(ok.astype(jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -316,23 +323,31 @@ def sim_step(
     """One dt step. Returns the new state and this step's metric deltas."""
     key, k_spawn = jax.random.split(st.key)
     st = st._replace(key=key)
+    impl = cfg.neighbor_impl
+    n_lanes_total = cfg.n_lanes + 1        # main lanes + ramp
 
-    # 1. neighbors + accel in current lanes
-    li, lg, hl, _, _, _ = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    # 1. pre-move snapshot: ONE fused neighborhood pass serves the own-lane
+    #    accel, both MOBIL candidate evaluations and the merge-target query
+    tabs = build_tables(
+        st.pos, st.lane, st.active, cfg.vehicle_len, n_lanes_total, impl
     )
-    a_now = _own_accel(st, cfg, st.lane, li, lg, hl)
+    own = tabs.query(st.lane)
+    a_now = _own_accel(st, cfg, st.lane, own.lead_idx, own.lead_gap,
+                       own.has_lead)
 
     # 2. lane changes (MOBIL) + ramp merges (gap acceptance)
-    new_lane, cooldown, n_lc = _apply_lane_changes(st, cfg, a_now, li, hl)
-    new_lane, n_merge = _apply_ramp_merges(st, cfg, new_lane)
+    new_lane, cooldown, n_lc = _apply_lane_changes(st, cfg, a_now, own, tabs)
+    new_lane, n_merge = _apply_ramp_merges(st, cfg, new_lane, tabs)
     st = st._replace(lane=new_lane, cooldown=cooldown)
 
-    # 3. recompute accel on post-change lanes, integrate
-    li, lg, hl, _, _, _ = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    # 3. post-change snapshot (second and last construction): recompute
+    #    accel on post-change lanes, integrate
+    nb = query_lanes(
+        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane, impl,
+        n_lanes_total=n_lanes_total,
     )
-    accel = _own_accel(st, cfg, st.lane, li, lg, hl)
+    accel = _own_accel(st, cfg, st.lane, nb.lead_idx, nb.lead_gap,
+                       nb.has_lead)
     accel = jnp.where(st.active, accel, 0.0)
     vel = jnp.maximum(st.vel + accel * cfg.dt, 0.0)
     pos = st.pos + vel * cfg.dt
@@ -342,9 +357,13 @@ def sim_step(
     vel = jnp.where(on_ramp & (pos >= cfg.merge_end), 0.0, vel)
     st = st._replace(pos=pos, vel=vel)
 
-    # 4. collisions: follower overlapping its lead → remove follower
-    li2, lg2, hl2, _, _, _ = neighbor_info(
-        st.pos, st.lane, st.active, cfg.vehicle_len, st.lane
+    # 4. collisions: follower overlapping its lead → remove follower.
+    #    Reuses the post-change lead assignment with the integrated
+    #    positions (each vehicle vs the leader it followed during this dt)
+    #    instead of a third all-pairs construction.
+    li2, hl2 = nb.lead_idx, nb.has_lead
+    lg2 = jnp.where(
+        hl2, st.pos[li2] - st.pos - cfg.vehicle_len, INF - cfg.vehicle_len
     )
     crashed = st.active & hl2 & (lg2 < 0.0)
     n_crash = jnp.sum(crashed.astype(jnp.int32))

@@ -45,6 +45,8 @@ class SweepConfig:
     vary_horizon: bool = False     # straggler population: horizons in
     min_horizon_frac: float = 0.5  # [frac*steps, steps]
     compaction: bool = True        # straggler mitigation (see module docstring)
+    # the neighborhood engine is selected per-instance-config via
+    # sim.neighbor_impl (see repro.core.neighbors / launch.sweep --neighbor-impl)
 
 
 class SweepState(NamedTuple):

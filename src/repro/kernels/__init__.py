@@ -11,7 +11,9 @@ Kernels:
   state (recurrentgemma).
 - ``rwkv6``           — WKV6 recurrence with data-dependent decay.
 - ``idm``             — the simulator's per-lane lead-gap + IDM acceleration
-  (the physics hot spot the paper delegates to Webots).
+  (the physics hot spot the paper delegates to Webots), plus the
+  generalized multi-query lead+follower ``neighbor_kernel`` backing the
+  neighborhood engine (``repro.core.neighbors``).
 """
 
 from repro.kernels.ops import (
@@ -19,6 +21,7 @@ from repro.kernels.ops import (
     rglru_linear_scan,
     wkv6,
     idm_accel_kernel,
+    neighbor_kernel,
 )
 
 __all__ = [
@@ -26,4 +29,5 @@ __all__ = [
     "rglru_linear_scan",
     "wkv6",
     "idm_accel_kernel",
+    "neighbor_kernel",
 ]

@@ -1,12 +1,22 @@
-"""IDM lead-search + acceleration (TPU Pallas) — the simulator's hot spot.
+"""Neighborhood search + IDM acceleration (TPU Pallas) — the simulator's hot spot.
 
 The paper's simulation engine (Webots physics + SUMO car following) reduces,
 per step, to: for every vehicle find the nearest same-lane leader, then apply
 IDM. That is an O(N²) masked min-reduction — on TPU, a tiled VPU problem.
 
-Grid: ``(nI, nJ)`` over (ego-tile, other-tile); the running minimum gap and
+``idm_accel_kernel`` (the original, lead-only form):
+grid ``(nI, nJ)`` over (ego-tile, other-tile); the running minimum gap and
 the lead's velocity live in VMEM scratch across J tiles (minor grid dim);
 the final J step computes the IDM formula and writes accelerations.
+
+``neighbor_kernel`` (the neighborhood engine's generalized form):
+grid ``(Q, nI, nJ)`` over (query-lane-vector, ego-tile, other-tile). For each
+of Q per-vehicle query-lane vectors it returns lead **and** follower
+(idx, gap, has) in one launch — the ~8 per-step O(N²) searches of
+``sim_step`` collapse into one kernel invocation per state snapshot. Running
+(gap, idx) minima for both directions live in VMEM scratch; ties resolve to
+the lowest slot index (strict-< running update + first-argmin within a
+tile), matching the jnp oracle bit-for-bit.
 Lead velocity is recovered with the classic two-pass-free trick: minimize a
 packed key ``gap·SCALE + rank(vel)`` — but here we simply carry both the min
 gap and an argmin-selected velocity via ``where`` updates, which the VPU
@@ -136,3 +146,122 @@ def idm_accel_kernel(
         r1(v0), r1(T), r1(a_max), r1(b_comf), r1(s0),
     )
     return acc[0, :n]
+
+
+# --------------------------------------------------------------------------
+# generalized multi-query lead+follower kernel (the neighborhood engine)
+# --------------------------------------------------------------------------
+
+def _neighbor_mq_kernel(
+    pos_ref, act_ref, qlane_ref,                          # ego tile [1, BI]
+    pos_j_ref, lane_j_ref, act_j_ref,                     # other tile [1, BJ]
+    li_ref, lg_ref, lh_ref, fi_ref, fg_ref, fh_ref,       # out [1, BI]
+    lgap_s, lidx_s, fgap_s, fidx_s,                       # scratch [1, BI]
+    *,
+    veh_len: float,
+    bj: int,
+):
+    ij = pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        lgap_s[...] = jnp.full_like(lgap_s, INF)
+        lidx_s[...] = jnp.zeros_like(lidx_s)
+        fgap_s[...] = jnp.full_like(fgap_s, INF)
+        fidx_s[...] = jnp.zeros_like(fidx_s)
+
+    pos_i = pos_ref[0]                                    # [BI]
+    pos_j = pos_j_ref[0]                                  # [BJ]
+    dpos = pos_j[None, :] - pos_i[:, None]                # [BI, BJ]
+    ok = (
+        (lane_j_ref[0][None, :] == qlane_ref[0][:, None])
+        & act_j_ref[0][None, :]
+        & act_ref[0][:, None]
+    )
+    base = (ij * bj).astype(jnp.int32)
+
+    def fold(d, gap_s, idx_s):
+        tile_min = d.min(axis=1)                          # [BI]
+        tile_idx = base + d.argmin(axis=1).astype(jnp.int32)
+        better = tile_min < gap_s[0]                      # ties keep lower j
+        gap_s[0] = jnp.where(better, tile_min, gap_s[0])
+        idx_s[0] = jnp.where(better, tile_idx, idx_s[0])
+
+    fold(jnp.where(ok & (dpos > 0.0), dpos, INF), lgap_s, lidx_s)
+    fold(jnp.where(ok & (dpos < 0.0), -dpos, INF), fgap_s, fidx_s)
+
+    @pl.when(ij == pl.num_programs(2) - 1)
+    def _finish():
+        has_l = lgap_s[0] < INF * 0.5
+        has_f = fgap_s[0] < INF * 0.5
+        lg_ref[0] = lgap_s[0] - veh_len
+        li_ref[0] = jnp.where(has_l, lidx_s[0], 0)
+        lh_ref[0] = has_l.astype(jnp.int32)
+        fg_ref[0] = fgap_s[0] - veh_len
+        fi_ref[0] = jnp.where(has_f, fidx_s[0], 0)
+        fh_ref[0] = has_f.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("veh_len", "block", "interpret"))
+def neighbor_kernel(
+    pos: jax.Array, lane: jax.Array, active: jax.Array,
+    query_lanes: jax.Array,
+    *,
+    veh_len: float = 4.5,
+    block: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, ...]:
+    """Multi-query lead+follower search.
+
+    ``query_lanes`` is ``[Q, N]`` (Q per-vehicle query-lane vectors).
+    Returns ``(lead_idx, lead_gap, has_lead, foll_idx, foll_gap, has_foll)``,
+    each ``[Q, N]``; semantics match ``repro.core.neighbors.neighbor_info``
+    bit-for-bit (absent: idx 0, gap INF − veh_len, has False).
+    """
+    n = pos.shape[0]
+    nq = query_lanes.shape[0]
+    bi = bj = min(block, max(n, 8))
+    pad = (-n) % bi
+    if pad:
+        pos = jnp.pad(pos, (0, pad), constant_values=-INF)
+        lane = jnp.pad(lane, (0, pad), constant_values=-1)
+        active = jnp.pad(active, (0, pad), constant_values=False)
+        query_lanes = jnp.pad(query_lanes, ((0, 0), (0, pad)),
+                              constant_values=0)
+    npad = pos.shape[0]
+
+    def r1(x):
+        return x.reshape(1, npad)
+
+    ego_spec = pl.BlockSpec((1, bi), lambda q, i, j: (0, i))
+    qln_spec = pl.BlockSpec((1, bi), lambda q, i, j: (q, i))
+    oth_spec = pl.BlockSpec((1, bj), lambda q, i, j: (0, j))
+    out_spec = pl.BlockSpec((1, bi), lambda q, i, j: (q, i))
+    kernel = functools.partial(_neighbor_mq_kernel, veh_len=veh_len, bj=bj)
+    shp = jax.ShapeDtypeStruct
+    li, lg, lh, fi, fg, fh = pl.pallas_call(
+        kernel,
+        grid=(nq, npad // bi, npad // bj),
+        in_specs=[ego_spec, ego_spec, qln_spec,
+                  oth_spec, oth_spec, oth_spec],
+        out_specs=[out_spec] * 6,
+        out_shape=[
+            shp((nq, npad), jnp.int32), shp((nq, npad), jnp.float32),
+            shp((nq, npad), jnp.int32), shp((nq, npad), jnp.int32),
+            shp((nq, npad), jnp.float32), shp((nq, npad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, bi), jnp.float32),
+            pltpu.VMEM((1, bi), jnp.int32),
+            pltpu.VMEM((1, bi), jnp.float32),
+            pltpu.VMEM((1, bi), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        r1(pos), r1(active), query_lanes,
+        r1(pos), r1(lane), r1(active),
+    )
+    return (
+        li[:, :n], lg[:, :n], lh[:, :n].astype(bool),
+        fi[:, :n], fg[:, :n], fh[:, :n].astype(bool),
+    )

@@ -13,6 +13,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru import rglru_linear_scan as _rglru
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 from repro.kernels.idm import idm_accel_kernel as _idm
+from repro.kernels.idm import neighbor_kernel as _neighbor
 
 
 def _default_interpret() -> bool:
@@ -45,5 +46,14 @@ def idm_accel_kernel(pos, vel, lane, active, v0, T, a_max, b_comf, s0,
     interpret = _default_interpret() if interpret is None else interpret
     return _idm(
         pos, vel, lane, active, v0, T, a_max, b_comf, s0,
+        veh_len=veh_len, block=block, interpret=interpret,
+    )
+
+
+def neighbor_kernel(pos, lane, active, query_lanes,
+                    *, veh_len=4.5, block=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _neighbor(
+        pos, lane, active, query_lanes,
         veh_len=veh_len, block=block, interpret=interpret,
     )

@@ -76,6 +76,8 @@ def _lower_cost(fn, args, mesh) -> CostVec:
         lowered = fn.lower(*args)
         compiled = lowered.compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older JAX: one dict per program
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return CostVec(
         float(cost.get("flops", 0.0)),

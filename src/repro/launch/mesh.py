@@ -21,3 +21,17 @@ def make_host_mesh():
     """Whatever devices exist, as a 1-D 'workers' mesh (sweeps, examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("workers",))
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-free mesh for spec validation (tests, dry-run planning).
+
+    ``jax.sharding.AbstractMesh`` changed signature across JAX releases:
+    older versions took ``(shape, axis_names)``, current ones take a single
+    ``((name, size), ...)`` tuple. Accept the classic (shape, axes) form and
+    build whichever the installed JAX wants.
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))

@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=1200)
     ap.add_argument("--chunk-steps", type=int, default=400)
     ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--neighbor-impl", default="sort",
+                    choices=["reference", "dense", "sort", "pallas"],
+                    help="neighborhood engine implementation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--vary-horizon", action="store_true")
     ap.add_argument("--fail-prob", type=float, default=0.0)
@@ -39,7 +42,7 @@ def main() -> None:
         n_instances=args.instances,
         steps_per_instance=args.steps,
         chunk_steps=args.chunk_steps,
-        sim=SimConfig(n_slots=args.slots),
+        sim=SimConfig(n_slots=args.slots, neighbor_impl=args.neighbor_impl),
         seed=args.seed,
         vary_horizon=args.vary_horizon,
     )

@@ -1,0 +1,39 @@
+"""Hypothesis compatibility shim.
+
+The property tests use hypothesis when it is installed (see
+``requirements-dev.txt``). When it is missing, importing it at module scope
+used to kill collection of four whole test modules; this shim instead turns
+only the ``@given`` property tests into skips so the plain unit tests in
+those modules keep running.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: property tests skip, everything else runs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call; values are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.ckpt import CheckpointManager, save_pytree, load_pytree, latest_step
 from repro.ckpt.io import load_meta

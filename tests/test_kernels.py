@@ -49,7 +49,10 @@ def test_flash_attention_matches_ref(b, sq, sk, h, kh, d, causal, window,
     )
     ref = ref_attention(q, k, v, causal=causal, window=window,
                         softcap=softcap)
-    tol = TOL if dtype == jnp.bfloat16 else dict(rtol=2e-3, atol=2e-4)
+    # bf16 outputs are O(1): one ulp at 1.0 is 7.8e-3, so atol below that
+    # flags single-element online-softmax rounding differences as failures
+    tol = dict(rtol=2e-2, atol=8e-3) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-4)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
     )

@@ -22,7 +22,9 @@ from repro.utils.tree import tree_flatten_with_paths
 def _mesh(shape=(2, 2), axes=("data", "model")):
     # single-device "mesh" stand-in isn't enough to validate divisibility,
     # so build an abstract mesh over the same device repeated logically.
-    return jax.sharding.AbstractMesh(shape, axes)
+    from repro.launch.mesh import make_abstract_mesh
+
+    return make_abstract_mesh(shape, axes)
 
 
 def _flatten_specs(specs):

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.config import TrainConfig, get_arch
 from repro.models import build_model
