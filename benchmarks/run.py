@@ -10,6 +10,8 @@ Benchmarks:
 - parallel_vs_serial  — paper Tables 5.2/5.3 / Fig 5.2 (6×8 vs 6×1)
 - kernels             — hot-spot layers (tiled attention, simulator step)
 - roofline            — §Roofline table from dry-run artifacts
+- sweep               — steps/sec per scenario × neighbor engine
+                        (writes BENCH_sweep.json for cross-PR tracking)
 """
 
 from __future__ import annotations
@@ -23,6 +25,7 @@ from benchmarks import (
     kernels_bench,
     parallel_vs_serial,
     roofline_bench,
+    sweep_bench,
     throughput,
 )
 
@@ -32,6 +35,7 @@ SUITES = {
     "parallel_vs_serial": parallel_vs_serial.run,
     "kernels": kernels_bench.run,
     "roofline": roofline_bench.run,
+    "sweep": sweep_bench.run,
 }
 
 

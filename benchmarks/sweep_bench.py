@@ -1,0 +1,69 @@
+"""Sweep benchmark: steps/sec per scenario × neighborhood engine.
+
+Emits the usual ``name,us_per_call,derived`` CSV lines AND writes
+``BENCH_sweep.json`` so the performance trajectory of every workload is
+tracked from PR to PR (compare the file across commits). The measured
+quantity is a jitted single-instance rollout (the unit the sweep vmaps),
+per scenario and per neighbor engine implementation.
+
+    PYTHONPATH=src python -m benchmarks.run --only sweep
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core.scenario import SimConfig, sample_scenario_params
+from repro.core.scenarios import list_scenarios
+from repro.core.simulator import rollout
+
+STEPS = 400
+N_SLOTS = 48
+OUT_PATH = "BENCH_sweep.json"
+
+
+def run() -> None:
+    impls = ["reference", "dense", "sort"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")   # interpret mode off-TPU is not a timing
+
+    results: dict[str, dict[str, dict[str, float]]] = {}
+    for name in list_scenarios():
+        results[name] = {}
+        for impl in impls:
+            cfg = SimConfig(n_slots=N_SLOTS, scenario=name,
+                            neighbor_impl=impl)
+            sp = sample_scenario_params(jax.random.key(1), cfg)
+            # key passed at call time so XLA cannot constant-fold the run
+            roll = jax.jit(
+                lambda k, cfg=cfg, sp=sp: rollout(k, cfg, sp, STEPS)
+            )
+            t = timeit(roll, jax.random.key(0))
+            steps_per_s = STEPS / t
+            results[name][impl] = {
+                "seconds_per_rollout": t,
+                "steps_per_sec": steps_per_s,
+                "veh_steps_per_sec": steps_per_s * N_SLOTS,
+            }
+            emit(
+                f"sweep_{name}_{impl}", t * 1e6,
+                f"{steps_per_s:.0f}_steps_per_s "
+                f"{steps_per_s * N_SLOTS:.0f}_veh_steps_per_s",
+            )
+
+    payload = {
+        "bench": "sweep",
+        "steps": STEPS,
+        "n_slots": N_SLOTS,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("sweep_json", 0.0, f"wrote_{OUT_PATH}")

@@ -1,6 +1,8 @@
 """Quickstart: the Webots.HPC pipeline end-to-end in one minute on CPU.
 
-1. Run a randomized highway-merge simulation sweep (the paper's workload).
+1. Run a randomized simulation sweep (the paper's highway-merge workload —
+   swap ``scenario=`` for any registry name: lane_drop, stop_and_go,
+   speed_limit_zone, or your own; see repro.core.scenarios).
 2. Aggregate the output dataset (paper §2.10 "big data" phase).
 3. Tokenize trajectories and train a small LM on them (Phase III).
 
@@ -20,7 +22,7 @@ from repro.train.trainer import Trainer
 
 def main() -> None:
     # ---- 1. simulation sweep (a small paper-style job array) -------------
-    sim = SimConfig(n_slots=32)
+    sim = SimConfig(n_slots=32, scenario="highway_merge")
     sweep = SweepConfig(
         n_instances=8, steps_per_instance=600, chunk_steps=200, sim=sim,
         seed=42,
@@ -31,7 +33,10 @@ def main() -> None:
     print(f"completion rate: {completion_rate(state)*100:.0f}%")
 
     # ---- 2. aggregate the output dataset ---------------------------------
-    summary = aggregate_metrics(state.metrics)
+    summary = aggregate_metrics(
+        state.metrics, scenario_ids=state.scenario_id,
+        scenario_names=sweep.scenarios,
+    )
     print("== aggregated dataset ==")
     for k, v in summary.items():
         print(f"  {k}: {v}")

@@ -1,7 +1,11 @@
 """The paper's contribution: a parallel, fault-tolerant simulation sweep pipeline.
 
-- :mod:`repro.core.scenario`  — randomized highway-merge scenario generation
+- :mod:`repro.core.scenario`  — randomized per-instance parameter sampling
   (the ``duarouter --randomize-flows --seed $RANDOM`` analogue).
+- :mod:`repro.core.scenarios` — the Scenario API + registry: road geometry,
+  parameter sampling and the three jit hook groups each workload plugs into
+  the scenario-agnostic ``sim_step`` (highway_merge, lane_drop, stop_and_go,
+  speed_limit_zone, ...).
 - :mod:`repro.core.neighbors` — the single-pass neighborhood engine (fused
   dense / sort-based / Pallas lead+follower queries behind one API).
 - :mod:`repro.core.simulator` — vectorized IDM+MOBIL merge simulator (the
@@ -16,6 +20,14 @@
 """
 
 from repro.core.scenario import SimConfig, ScenarioParams, sample_scenario_params
+from repro.core.scenarios import (
+    RoadGeometry,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    scenario_index,
+)
 from repro.core.neighbors import (
     Neighbors,
     NeighborTables,
@@ -36,6 +48,12 @@ __all__ = [
     "SimConfig",
     "ScenarioParams",
     "sample_scenario_params",
+    "RoadGeometry",
+    "Scenario",
+    "get_scenario",
+    "list_scenarios",
+    "register_scenario",
+    "scenario_index",
     "Neighbors",
     "NeighborTables",
     "build_tables",

@@ -5,21 +5,37 @@ into one large dataset for ML (Phase III). Here a finished sweep's stacked
 :class:`SimMetrics` *is* that dataset; this module turns it into per-instance
 records and population summaries (the quantities the Phase-III models learn
 to predict: throughput, merge success, safety).
+
+Scenario awareness: pass the sweep's ``scenario_id`` vector and roster
+(``SweepConfig.scenarios``) and records gain a ``scenario`` field plus the
+scenario's *aliased* metric names (``Scenario.metric_aliases`` — e.g. the
+``ramp_blocked_steps`` slot surfaces as ``stopped_steps`` for a ring road),
+while summaries gain a ``per_scenario`` group-by.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.simulator import SimMetrics
 from repro.core.scenario import ScenarioParams
+from repro.core.scenarios import get_scenario
+
+
+def _scenario_of(i: int, scenario_ids, scenario_names) -> str | None:
+    if scenario_ids is None or scenario_names is None:
+        return None
+    return scenario_names[int(scenario_ids[i])]
 
 
 def metrics_to_records(
-    metrics: SimMetrics, params: ScenarioParams | None = None
+    metrics: SimMetrics,
+    params: ScenarioParams | None = None,
+    scenario_ids: Any = None,
+    scenario_names: Sequence[str] | None = None,
 ) -> list[dict[str, Any]]:
     """Stacked [N] metrics → list of per-instance dict records."""
     m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
@@ -29,6 +45,8 @@ def metrics_to_records(
         if params is not None
         else None
     )
+    if scenario_ids is not None:
+        scenario_ids = np.asarray(jax.device_get(scenario_ids))
     records = []
     for i in range(n):
         rec = {
@@ -45,34 +63,84 @@ def metrics_to_records(
             "min_ttc": float(m.min_ttc[i]),
             "steps": int(m.steps[i]),
         }
+        name = _scenario_of(i, scenario_ids, scenario_names)
+        if name is not None:
+            rec["scenario"] = name
+            # surface the scenario's meaning of the generic metric slots
+            for generic, alias in get_scenario(name).metric_aliases.items():
+                rec[alias] = rec[generic]
         if p is not None:
             rec.update(
                 lambda_main=[float(x) for x in np.atleast_1d(p.lambda_main[i])],
                 lambda_ramp=float(p.lambda_ramp[i]),
                 p_cav=float(p.p_cav[i]),
                 v0_mean=float(p.v0_mean[i]),
+                aux0=float(np.atleast_1d(p.aux0)[i])
+                if np.ndim(p.aux0) else float(p.aux0),
+                aux1=float(np.atleast_1d(p.aux1)[i])
+                if np.ndim(p.aux1) else float(p.aux1),
             )
         records.append(rec)
     return records
 
 
-def aggregate_metrics(metrics: SimMetrics) -> dict[str, float]:
-    """Population summary over a sweep — the 'massive output dataset' digest."""
-    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
-    speed = m.speed_sum / np.maximum(m.speed_count, 1.0)
-    total_steps = float(m.steps.sum())
+def _summarize(m: SimMetrics, sel: np.ndarray) -> dict[str, float]:
+    speed = m.speed_sum[sel] / np.maximum(m.speed_count[sel], 1.0)
+    total_steps = float(m.steps[sel].sum())
     return {
-        "instances": int(m.throughput.shape[0]),
-        "total_throughput": int(m.throughput.sum()),
-        "total_spawned": int(m.spawned.sum()),
+        "instances": int(sel.sum()),
+        "total_throughput": int(m.throughput[sel].sum()),
+        "total_spawned": int(m.spawned[sel].sum()),
         "mean_speed": float(speed.mean()),
         "p10_speed": float(np.percentile(speed, 10)),
         "p90_speed": float(np.percentile(speed, 90)),
-        "total_collisions": int(m.collisions.sum()),
+        "total_collisions": int(m.collisions[sel].sum()),
         "collision_rate_per_kstep": float(
-            1000.0 * m.collisions.sum() / max(total_steps, 1.0)
+            1000.0 * m.collisions[sel].sum() / max(total_steps, 1.0)
         ),
-        "total_merges": int(m.merges_ok.sum()),
-        "min_ttc": float(m.min_ttc.min()),
+        "total_merges": int(m.merges_ok[sel].sum()),
+        "total_ramp_blocked_steps": int(m.ramp_blocked_steps[sel].sum()),
+        "min_ttc": float(m.min_ttc[sel].min()),
         "total_sim_steps": int(total_steps),
     }
+
+
+def aggregate_metrics(
+    metrics: SimMetrics,
+    scenario_ids: Any = None,
+    scenario_names: Sequence[str] | None = None,
+) -> dict[str, Any]:
+    """Population summary over a sweep — the 'massive output dataset' digest.
+
+    With ``scenario_ids``/``scenario_names`` the summary also carries a
+    ``per_scenario`` dict: the same digest grouped by workload (a mixed
+    sweep's per-scenario completion/throughput/safety table).
+    """
+    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
+    all_sel = np.ones(m.throughput.shape[0], bool)
+    out: dict[str, Any] = _summarize(m, all_sel)
+    if scenario_ids is not None and scenario_names is not None:
+        ids = np.asarray(jax.device_get(scenario_ids))
+        per: dict[str, Any] = {}
+        # group by NAME, not roster slot: a weighted mix may list the same
+        # scenario several times (e.g. stop_and_go,stop_and_go,highway_merge)
+        for name in dict.fromkeys(scenario_names):  # unique, order-stable
+            slots = [s for s, n in enumerate(scenario_names) if n == name]
+            sel = np.isin(ids, slots)
+            if not sel.any():
+                continue
+            sub = _summarize(m, sel)
+            # rename the generic slots to what they mean for this workload
+            for generic, alias in get_scenario(name).metric_aliases.items():
+                total_key = {
+                    "merges_ok": "total_merges",
+                    "throughput": "total_throughput",
+                    "spawned": "total_spawned",
+                    "collisions": "total_collisions",
+                    "ramp_blocked_steps": "total_ramp_blocked_steps",
+                }.get(generic)
+                if total_key and total_key in sub:
+                    sub[f"total_{alias}"] = sub.pop(total_key)
+            per[name] = sub
+        out["per_scenario"] = per
+    return out

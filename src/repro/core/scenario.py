@@ -1,4 +1,4 @@
-"""Scenario generation â€” the ``duarouter --randomize-flows --seed $RANDOM`` analogue.
+"""Scenario configuration + randomized parameter sampling.
 
 The paper randomizes each simulation instance's traffic demand by re-running
 SUMO's ``duarouter`` with a fresh ``$RANDOM`` seed before every run (Appendix
@@ -8,14 +8,19 @@ which gives the same property â€” thousands of runs with meaningful deviations â
 with exact reproducibility and no shared mutable state (the TPU-native fix for
 the paper's duplicate-TraCI-port bug class).
 
-Scenario: the paper's Phase-II workload, a mixed-traffic highway merge.
-Geometry (all distances in meters, speeds in m/s)::
+*Which* simulation runs is no longer baked in here: ``SimConfig.scenario``
+names an entry in the scenario registry (:mod:`repro.core.scenarios`), and
+``sample_scenario_params`` dispatches to that scenario's ``sample_params``.
+The paper's Phase-II workload is the default, ``"highway_merge"``::
 
       lane 2  â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â–¶
       lane 1  â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â–¶
       lane 0  â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â”€â–¶
       ramp(3) â•â•â•â•â•â•â•â•â•â•â•â•â•— merge zone â•”â•â•â• (ends; must merge or stop)
                       merge_start   merge_end
+
+See ``repro.core.scenarios`` for the catalog (lane_drop, stop_and_go,
+speed_limit_zone, ...) and for how to register a custom scenario.
 """
 
 from __future__ import annotations
@@ -34,8 +39,12 @@ class SimConfig:
     n_slots: int = 64          # fixed vehicle capacity per instance
     n_lanes: int = 3           # main highway lanes (ramp is lane index n_lanes)
     road_len: float = 1000.0
+    # generic scenario-zone extents; the highway merge reads them as the
+    # merge zone, lane_drop as the bottleneck taper, speed_limit_zone as
+    # the work zone (see each scenario's geometry())
     merge_start: float = 600.0
     merge_end: float = 750.0
+    scenario: str = "highway_merge"  # registry name (repro.core.scenarios)
     dt: float = 0.1            # SUMO default step length
     vehicle_len: float = 4.5
     spawn_gap: float = 15.0    # min headway at the spawn point
@@ -61,29 +70,28 @@ class ScenarioParams(NamedTuple):
     """Per-instance randomized demand + driver-population parameters.
 
     Every field is a scalar (or per-lane vector) jnp array so a batch of
-    instances is just a vmapped axis.
+    instances is just a vmapped axis. The structure is shared by *all*
+    registered scenarios (a ``lax.switch`` over scenario step functions needs
+    one common pytree): fields a scenario does not use are sampled as zeros,
+    and ``aux0``/``aux1`` are generic scenario knobs (speed-limit value,
+    perturbation strength, ... â€” see each scenario's ``sample_params``).
     """
 
     lambda_main: jax.Array   # [n_lanes] arrival rate veh/s per main lane
-    lambda_ramp: jax.Array   # [] arrival rate on the ramp
+    lambda_ramp: jax.Array   # [] arrival rate on the ramp (ramp scenarios)
     p_cav: jax.Array         # [] CAV penetration (paper: mixed traffic)
     v0_mean: jax.Array       # [] mean desired speed
     v0_ramp: jax.Array       # [] desired speed on ramp
     seed: jax.Array          # [] uint32 instance seed (for in-sim draws)
+    aux0: jax.Array = 0.0    # [] scenario-specific knob (see scenario doc)
+    aux1: jax.Array = 0.0    # [] scenario-specific knob
 
 
 def sample_scenario_params(key: jax.Array, cfg: SimConfig) -> ScenarioParams:
-    """Draw one instance's scenario. Ranges follow typical highway calibration."""
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
-    lambda_main = jax.random.uniform(
-        k1, (cfg.n_lanes,), minval=0.15, maxval=0.55
-    )
-    lambda_ramp = jax.random.uniform(k2, (), minval=0.05, maxval=0.30)
-    p_cav = jax.random.uniform(k3, (), minval=0.0, maxval=1.0)
-    v0_mean = jax.random.uniform(k4, (), minval=26.0, maxval=33.0)
-    v0_ramp = v0_mean * 0.7
-    seed = jax.random.randint(k5, (), 0, 2**31 - 1).astype(jnp.uint32)
-    return ScenarioParams(lambda_main, lambda_ramp, p_cav, v0_mean, v0_ramp, seed)
+    """Draw one instance's parameters for ``cfg.scenario`` (registry dispatch)."""
+    from repro.core.scenarios import get_scenario  # deferred: avoids cycle
+
+    return get_scenario(cfg.scenario).sample_params(key, cfg)
 
 
 # Driver-type parameter tables (human, CAV). CAVs run tighter headways and

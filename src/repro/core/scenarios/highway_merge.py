@@ -1,0 +1,102 @@
+"""The paper's Phase-II workload: a mixed-traffic highway on-ramp merge.
+
+Geometry (all distances in meters, speeds in m/s)::
+
+      lane 2  ──────────────────────────────────────────▶
+      lane 1  ──────────────────────────────────────────▶
+      lane 0  ──────────────────────────────────────────▶
+      ramp(3) ════════════╗ merge zone ╔═══ (ends; must merge or stop)
+                      merge_start   merge_end
+
+This module is the seed simulator's hardcoded behavior extracted verbatim
+into the Scenario API — bit-for-bit trajectory parity with the pre-refactor
+``sim_step`` is asserted by ``tests/test_scenarios.py``:
+
+- ramp vehicles brake against a virtual standing wall at the ramp end
+  (``longitudinal_mods``) and are excluded from MOBIL (``mobil_eligible``);
+- inside the merge zone they take a gap-acceptance merge into lane 0, with
+  CAVs accepting 0.7× gaps — cooperative merging (``lateral_rules``);
+- the ramp is a hard dead end: position clamps at ``merge_end`` with speed
+  zeroed (``boundary_clamp``); the gauge counts ramp vehicles stuck there.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import ScenarioParams, SimConfig
+from repro.core.scenarios.base import (
+    RoadGeometry,
+    Scenario,
+    end_wall_clamp,
+    end_wall_gauge,
+    end_wall_mods,
+    gap_acceptance,
+)
+
+
+class HighwayMerge(Scenario):
+    name = "highway_merge"
+    # the generic metric names ARE the merge-flavored ones (seed heritage)
+    metric_aliases: dict[str, str] = {}
+
+    def geometry(self, cfg: SimConfig) -> RoadGeometry:
+        return RoadGeometry(
+            n_lanes=cfg.n_lanes,
+            road_len=cfg.road_len,
+            special_lane="ramp",
+            zone_start=cfg.merge_start,
+            zone_end=cfg.merge_end,
+        )
+
+    def sample_params(self, key: jax.Array, cfg: SimConfig) -> ScenarioParams:
+        """Ranges follow typical highway calibration (seed draw order kept
+        exactly — the per-instance PRNG stream is part of the parity
+        contract)."""
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        lambda_main = jax.random.uniform(
+            k1, (cfg.n_lanes,), minval=0.15, maxval=0.55
+        )
+        lambda_ramp = jax.random.uniform(k2, (), minval=0.05, maxval=0.30)
+        p_cav = jax.random.uniform(k3, (), minval=0.0, maxval=1.0)
+        v0_mean = jax.random.uniform(k4, (), minval=26.0, maxval=33.0)
+        v0_ramp = v0_mean * 0.7
+        seed = jax.random.randint(k5, (), 0, 2**31 - 1).astype(jnp.uint32)
+        z = jnp.zeros(())
+        return ScenarioParams(
+            lambda_main, lambda_ramp, p_cav, v0_mean, v0_ramp, seed, z, z
+        )
+
+    # ---------------- longitudinal: ramp-end virtual wall ----------------
+
+    def longitudinal_mods(self, st, cfg, geom, sp, query_lane, nb, a,
+                          ctx=None):
+        return end_wall_mods(st, geom.zone_end, query_lane == geom.n_lanes, a)
+
+    # ---------------- lateral: gap-acceptance merge ----------------
+
+    def lateral_rules(self, st, cfg, geom, sp, tabs, mobil_lane):
+        """Merge from the ramp into lane 0 inside the merge zone."""
+        on_ramp = (st.lane == geom.n_lanes) & st.active
+        in_zone = (st.pos >= geom.zone_start) & (st.pos <= geom.zone_end)
+        gap_ok = gap_acceptance(st, cfg, tabs, jnp.zeros_like(st.lane))
+        merge = on_ramp & in_zone & gap_ok
+        merged_lane = jnp.where(merge, 0, mobil_lane)
+        return merged_lane, jnp.sum(merge.astype(jnp.int32))
+
+    # ---------------- boundary: ramp demand, dead end, blockage ----------
+
+    def boundary_spawn(self, cfg, geom, sp):
+        lanes = jnp.arange(geom.n_lanes + 1)
+        lam = jnp.concatenate([sp.lambda_main, sp.lambda_ramp[None]])
+        base_v0 = jnp.where(lanes == geom.n_lanes, sp.v0_ramp, sp.v0_mean)
+        return lam, base_v0, lanes
+
+    def boundary_clamp(self, st, cfg, geom, pos, vel):
+        # ramp hard end: cannot drive past it without merging
+        return end_wall_clamp(geom.zone_end, st.lane == geom.n_lanes, pos, vel)
+
+    def boundary_gauge(self, st, cfg, geom):
+        # vehicle-steps stopped at the ramp end (merge starvation gauge)
+        return end_wall_gauge(st, geom.zone_end, st.lane == geom.n_lanes)

@@ -1,0 +1,115 @@
+"""Lane-drop bottleneck: the rightmost lane ends; everyone in it must merge.
+
+Geometry::
+
+      lane 2  ──────────────────────────────────────────▶
+      lane 1  ──────────────────────────────────────────▶
+      lane 0  ───────────────────────╗ taper ╔ (lane ends — merge or stop)
+                                zone_start  zone_end
+
+The classic capacity-drop workload: all ``n_lanes`` are main lanes, but lane
+0 physically terminates at ``zone_end`` (``SimConfig.merge_start/merge_end``
+are read as the taper extent). Hook usage:
+
+- ``longitudinal_mods`` — lane-0 vehicles brake against a virtual wall at
+  the taper end (the same IDM-against-standing-obstacle trick as the ramp);
+- ``lateral_rules`` — inside the taper, lane-0 vehicles take a mandatory
+  gap-acceptance merge into lane 1 (CAVs accept 0.7× gaps); MOBIL moves
+  *into* lane 0 are vetoed once past ``zone_start`` (the lane is closing);
+- ``boundary`` — spawning on all main lanes at ``lambda_main``; lane-0
+  position clamps at the taper end; the gauge counts vehicles stuck there.
+
+Forced merges are reported in the ``merges_ok`` metric slot
+(→ ``forced_merges``), blockage in ``ramp_blocked_steps``
+(→ ``drop_blocked_steps``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import ScenarioParams, SimConfig
+from repro.core.scenarios.base import (
+    RoadGeometry,
+    Scenario,
+    end_wall_clamp,
+    end_wall_gauge,
+    end_wall_mods,
+    gap_acceptance,
+)
+
+DROP_LANE = 0          # the terminating lane
+TARGET_LANE = 1        # where its traffic must go
+
+
+class LaneDrop(Scenario):
+    name = "lane_drop"
+    metric_aliases = {
+        "merges_ok": "forced_merges",
+        "ramp_blocked_steps": "drop_blocked_steps",
+    }
+
+    def geometry(self, cfg: SimConfig) -> RoadGeometry:
+        if cfg.n_lanes < 2:
+            raise ValueError(
+                "lane_drop needs n_lanes >= 2: lane 0 terminates and its "
+                f"traffic merges into lane {TARGET_LANE}"
+            )
+        return RoadGeometry(
+            n_lanes=cfg.n_lanes,
+            road_len=cfg.road_len,
+            special_lane="drop",
+            zone_start=cfg.merge_start,
+            zone_end=cfg.merge_end,
+        )
+
+    def sample_params(self, key: jax.Array, cfg: SimConfig) -> ScenarioParams:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        z = jnp.zeros(())
+        # heavier demand than the merge — the bottleneck is the point
+        lambda_main = jax.random.uniform(
+            k1, (cfg.n_lanes,), minval=0.25, maxval=0.65
+        )
+        p_cav = jax.random.uniform(k2, (), minval=0.0, maxval=1.0)
+        v0_mean = jax.random.uniform(k3, (), minval=26.0, maxval=33.0)
+        seed = jax.random.randint(k4, (), 0, 2**31 - 1).astype(jnp.uint32)
+        return ScenarioParams(
+            lambda_main=lambda_main, lambda_ramp=z, p_cav=p_cav,
+            v0_mean=v0_mean, v0_ramp=v0_mean, seed=seed, aux0=z, aux1=z,
+        )
+
+    # ---------------- longitudinal: taper-end wall for lane 0 -------------
+
+    def longitudinal_mods(self, st, cfg, geom, sp, query_lane, nb, a,
+                          ctx=None):
+        return end_wall_mods(st, geom.zone_end, query_lane == DROP_LANE, a)
+
+    # ---------------- lateral: forced exit from the dying lane ------------
+
+    def mobil_candidate_ok(self, st, cfg, geom, cand_lane):
+        # no discretionary moves INTO the drop lane once it is closing
+        # (vetoed inside the MOBIL decision: no cooldown, no metric count)
+        into_closing = (
+            (cand_lane == DROP_LANE) & (st.lane != DROP_LANE)
+            & (st.pos >= geom.zone_start)
+        )
+        return ~into_closing
+
+    def lateral_rules(self, st, cfg, geom, sp, tabs, mobil_lane):
+        # mandatory gap-acceptance merge out of lane 0 inside the taper
+        must_merge = (st.lane == DROP_LANE) & st.active
+        in_zone = (st.pos >= geom.zone_start) & (st.pos <= geom.zone_end)
+        target = jnp.full_like(st.lane, TARGET_LANE)
+        gap_ok = gap_acceptance(st, cfg, tabs, target)
+        merge = must_merge & in_zone & gap_ok
+        lane = jnp.where(merge, TARGET_LANE, mobil_lane)
+        return lane, jnp.sum(merge.astype(jnp.int32))
+
+    # ---------------- boundary ----------------
+
+    def boundary_clamp(self, st, cfg, geom, pos, vel):
+        return end_wall_clamp(geom.zone_end, st.lane == DROP_LANE, pos, vel)
+
+    def boundary_gauge(self, st, cfg, geom):
+        return end_wall_gauge(st, geom.zone_end, st.lane == DROP_LANE)

@@ -1,0 +1,151 @@
+"""Stop-and-go waves: a closed ring road with a periodic braking perturbation.
+
+The canonical traffic-flow instability workload (Sugiyama's circular-track
+experiment): vehicles on a ring (positions wrap mod ``road_len``), a braking
+perturbation applied periodically in a fixed road band, and the phantom
+traffic jams that nucleate from it measured as stopped vehicle-steps.
+
+Hook usage — this scenario exercises the hooks the merge never touches:
+
+- ``longitudinal_mods`` — (a) wrap-around car following: the frontmost
+  vehicle of each lane follows that lane's *rearmost* vehicle across the
+  seam (the linear neighbor engine reports it lead-less); (b) every
+  ``aux1`` seconds, vehicles inside the perturbation band are forced to
+  brake at ``aux0`` m/s² for a few seconds — the wave seed.
+- ``boundary`` — positions wrap (``boundary_clamp``); there are *no exits*
+  (``boundary_exit`` is never), so spawning is self-limiting: arrivals stop
+  once the seam headway drops below ``spawn_gap``; the gauge counts stopped
+  vehicles (the shockwave-extent metric, → ``stopped_steps``).
+- ``lateral_rules`` — pure MOBIL (defaults); multi-lane rings develop
+  lane-asymmetric waves.
+
+The collision/TTC stage in the scenario-agnostic ``sim_step`` measures gaps
+with a centered wrap (``geom.ring``) so a leader crossing the seam is not a
+phantom collision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import ScenarioParams, SimConfig
+from repro.core.scenarios.base import (
+    INF,
+    RoadGeometry,
+    Scenario,
+    idm_accel,
+)
+
+PERTURB_SECONDS = 5.0       # how long each braking pulse lasts
+BAND = (0.45, 0.55)         # perturbation band, as fractions of road_len
+SEAM_FRAC = 0.10            # no discretionary lane changes this close to
+#                             the seam (linear tables can't see across it)
+
+
+class StopAndGo(Scenario):
+    name = "stop_and_go"
+    metric_aliases = {
+        "ramp_blocked_steps": "stopped_steps",
+        "throughput": "exited",  # structurally present, always 0 on a ring
+    }
+
+    def geometry(self, cfg: SimConfig) -> RoadGeometry:
+        # a ring long enough to hold the slot capacity at ~30 m/lane spacing
+        # (the congested regime where waves nucleate — Sugiyama's setup),
+        # never longer than the configured road
+        ring_len = min(cfg.road_len, max(cfg.n_slots, 8) * 30.0 / cfg.n_lanes)
+        return RoadGeometry(
+            n_lanes=cfg.n_lanes,
+            road_len=ring_len,
+            ring=True,
+        )
+
+    def sample_params(self, key: jax.Array, cfg: SimConfig) -> ScenarioParams:
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        z = jnp.zeros(())
+        lambda_main = jax.random.uniform(
+            k1, (cfg.n_lanes,), minval=0.25, maxval=0.70
+        )
+        p_cav = jax.random.uniform(k2, (), minval=0.0, maxval=1.0)
+        v0_mean = jax.random.uniform(k3, (), minval=26.0, maxval=33.0)
+        seed = jax.random.randint(k4, (), 0, 2**31 - 1).astype(jnp.uint32)
+        brake = jax.random.uniform(k5, (), minval=2.0, maxval=5.0)   # aux0
+        period = jax.random.uniform(k6, (), minval=20.0, maxval=45.0)  # aux1
+        return ScenarioParams(
+            lambda_main=lambda_main, lambda_ramp=z, p_cav=p_cav,
+            v0_mean=v0_mean, v0_ramp=v0_mean, seed=seed,
+            aux0=brake, aux1=period,
+        )
+
+    # ------------- lateral: MOBIL, but not across/near the seam -----------
+
+    def mobil_eligible(self, st, cfg, geom):
+        # the neighbor tables are linear: a lane change just past the seam
+        # is invisible to the safety check of a follower still approaching
+        # it — forbid discretionary changes in the seam window
+        away_from_seam = (
+            (st.pos > SEAM_FRAC * geom.road_len)
+            & (st.pos < (1.0 - SEAM_FRAC) * geom.road_len)
+        )
+        return (st.lane < geom.n_lanes) & away_from_seam
+
+    # ------------- longitudinal: wrap leader + periodic perturbation ------
+
+    def snapshot_ctx(self, st, cfg, geom):
+        # per-lane rearmost vehicle — the wrap leader across the seam.
+        # Computed once per neighborhood snapshot; every accel query on the
+        # snapshot (own lane + both MOBIL candidates) reuses it.
+        lanes = jnp.arange(geom.n_lanes)
+        in_lane = st.active[None, :] & (st.lane[None, :] == lanes[:, None])
+        keyed = jnp.where(in_lane, st.pos[None, :], INF)       # [L, N]
+        rear_slot = jnp.argmin(keyed, axis=1)                  # [L]
+        rear_pos = jnp.min(keyed, axis=1)
+        rear_vel = st.vel[rear_slot]
+        return rear_pos, rear_vel
+
+    def longitudinal_mods(self, st, cfg, geom, sp, query_lane, nb, a,
+                          ctx=None):
+        # (a) wrap-around following: lead-less vehicles follow the rearmost
+        # vehicle of their query lane across the seam
+        rear_pos, rear_vel = (
+            ctx if ctx is not None else self.snapshot_ctx(st, cfg, geom)
+        )
+        q = jnp.clip(query_lane, 0, geom.n_lanes - 1)
+        wrap_gap = rear_pos[q] + geom.road_len - st.pos - cfg.vehicle_len
+        wrap_dv = st.vel - rear_vel[q]
+        a_wrap = idm_accel(
+            st.vel, wrap_dv, wrap_gap,
+            st.v0, st.T, st.a_max, st.b_comf, st.s0,
+        )
+        lane_occupied = rear_pos[q] < INF * 0.5
+        use_wrap = ~nb.has_lead & lane_occupied
+        a = jnp.where(use_wrap, jnp.minimum(a, a_wrap), a)
+
+        # (b) periodic braking pulse inside the band — the wave seed
+        period = jnp.maximum(sp.aux1, 1.0)
+        phase = jnp.mod(st.t.astype(jnp.float32) * cfg.dt, period)
+        pulsing = phase < PERTURB_SECONDS
+        in_band = (
+            (st.pos >= BAND[0] * geom.road_len)
+            & (st.pos <= BAND[1] * geom.road_len)
+        )
+        a = jnp.where(
+            pulsing & in_band, jnp.minimum(a, -sp.aux0), a
+        )
+        return a
+
+    # ---------------- boundary: wrap, no exits, stopped gauge -------------
+
+    def boundary_clamp(self, st, cfg, geom, pos, vel):
+        # ring wrap; inactive slots stay parked at -INF (mod would NaN them)
+        pos = jnp.where(st.active, jnp.mod(pos, geom.road_len), pos)
+        return pos, vel
+
+    def boundary_exit(self, st, cfg, geom):
+        return jnp.zeros_like(st.active)
+
+    def boundary_gauge(self, st, cfg, geom):
+        # creeping-or-stopped vehicles: the shockwave-extent measure
+        stopped = st.active & (st.vel < 2.0)
+        return jnp.sum(stopped.astype(jnp.int32))

@@ -1,4 +1,4 @@
-"""Vectorized mixed-traffic highway-merge simulator — the Webots+SUMO analogue.
+"""Vectorized mixed-traffic simulator core — the Webots+SUMO analogue.
 
 The paper runs a Webots front-end puppeteered by SUMO (§2.5.3) as its sample
 workload: a mixed-traffic highway merge. Porting that to TPU means replacing
@@ -7,7 +7,13 @@ the process-per-instance binary simulator with a pure-JAX physics step:
 - **IDM** (Intelligent Driver Model, Treiber et al. 2000) longitudinal
   car-following — what SUMO's default Krauss model approximates.
 - **MOBIL** (Kesting et al. 2007) incentive/safety lane changing.
-- **Gap-acceptance ramp merging** with CAV/human parameter mixing (Phase II).
+- **Pluggable scenarios**: everything workload-specific (road geometry,
+  demand, the merge's gap acceptance, a lane-drop's forced exit, a ring
+  road's wrap...) lives behind the Scenario API (``repro.core.scenarios``).
+  ``sim_step`` itself is scenario-agnostic: it calls the scenario's three
+  jit hook groups — ``longitudinal_mods``, ``lateral_rules``, ``boundary``
+  — selected by the static ``SimConfig.scenario`` name, so new workloads
+  never fork the physics step.
 
 One instance = one row of a batched state pytree: ``vmap`` gives the paper's
 "n simulation instances per node" and sharding the instance axis gives "across
@@ -58,6 +64,12 @@ from repro.core.scenario import (
     ScenarioParams,
     driver_params,
 )
+from repro.core.scenarios import get_scenario
+from repro.core.scenarios.base import (  # noqa: F401  (idm_accel re-exported)
+    RoadGeometry,
+    Scenario,
+    idm_accel,
+)
 from repro.core.neighbors import (  # noqa: F401  (neighbor_info re-exported)
     Neighbors,
     NeighborTables,
@@ -92,8 +104,11 @@ class SimMetrics(NamedTuple):
     speed_sum: jax.Array       # [] f32
     speed_count: jax.Array     # [] f32
     collisions: jax.Array      # [] i32
-    merges_ok: jax.Array       # [] i32
-    ramp_blocked_steps: jax.Array  # [] i32 vehicle-steps stuck at ramp end
+    merges_ok: jax.Array       # [] i32 scenario-forced lane moves (merges)
+    ramp_blocked_steps: jax.Array  # [] i32 scenario congestion gauge
+    # (field names keep their merge-era spelling: the struct must be
+    # identical across scenarios for lax.switch sweeps; scenarios rename
+    # them in records via Scenario.metric_aliases)
     lane_changes: jax.Array    # [] i32
     min_ttc: jax.Array         # [] f32
     steps: jax.Array           # [] i32
@@ -129,44 +144,32 @@ def init_state(cfg: SimConfig, key: jax.Array) -> SimState:
 
 
 # --------------------------------------------------------------------------
-# physics primitives
+# physics primitives (idm_accel lives in scenarios.base; re-exported above)
 # --------------------------------------------------------------------------
 
-def idm_accel(v, dv, gap, v0, T, a_max, b_comf, s0):
-    """IDM acceleration. ``dv`` is the closing speed (v_self - v_lead)."""
-    gap = jnp.maximum(gap, 0.1)
-    s_star = s0 + jnp.maximum(
-        0.0, v * T + v * dv / (2.0 * jnp.sqrt(a_max * b_comf))
-    )
-    free = (v / jnp.maximum(v0, 0.1)) ** 4
-    return a_max * (1.0 - free - (s_star / gap) ** 2)
-
-
-def _own_accel(st: SimState, cfg: SimConfig, query_lane, lead_idx, lead_gap,
-               has_lead):
-    """IDM accel of each vehicle against its lead in ``query_lane`` +
-    the ramp-end virtual wall for ramp vehicles."""
-    v_lead = jnp.where(has_lead, st.vel[lead_idx], 0.0)
-    gap = jnp.where(has_lead, lead_gap, INF)
-    dv = jnp.where(has_lead, st.vel - v_lead, 0.0)
+def _own_accel(st: SimState, cfg: SimConfig, geom: RoadGeometry,
+               scn: Scenario, sp: ScenarioParams, query_lane, nb: Neighbors,
+               ctx=None):
+    """IDM accel of each vehicle against its lead in ``query_lane``, plus
+    the scenario's extra longitudinal constraints (ramp wall, speed-limit
+    zone, wrap-around leader, ...), clamped to ``[-b_max, a_max]``.
+    ``ctx`` is the scenario's once-per-snapshot ``snapshot_ctx`` result."""
+    v_lead = jnp.where(nb.has_lead, st.vel[nb.lead_idx], 0.0)
+    gap = jnp.where(nb.has_lead, nb.lead_gap, INF)
+    dv = jnp.where(nb.has_lead, st.vel - v_lead, 0.0)
     a = idm_accel(st.vel, dv, gap, st.v0, st.T, st.a_max, st.b_comf, st.s0)
-
-    # ramp vehicles also brake against a virtual standing obstacle at ramp end
-    on_ramp = query_lane == cfg.n_lanes
-    wall_gap = cfg.merge_end - st.pos
-    a_wall = idm_accel(
-        st.vel, st.vel, wall_gap, st.v0, st.T, st.a_max, st.b_comf, st.s0
-    )
-    a = jnp.where(on_ramp, jnp.minimum(a, a_wall), a)
+    a = scn.longitudinal_mods(st, cfg, geom, sp, query_lane, nb, a, ctx)
     return jnp.clip(a, -cfg.b_max, st.a_max)
 
 
 # --------------------------------------------------------------------------
-# MOBIL lane changing (main lanes) + gap-acceptance ramp merge
+# MOBIL lane changing (scenario gates eligibility + mandatory moves)
 # --------------------------------------------------------------------------
 
-def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
-                     tabs: NeighborTables, cand_lane):
+def _mobil_candidate(st: SimState, cfg: SimConfig, geom: RoadGeometry,
+                     scn: Scenario, sp: ScenarioParams, a_now,
+                     own: Neighbors, tabs: NeighborTables, cand_lane,
+                     ctx=None):
     """MOBIL incentive + safety for moving every vehicle to ``cand_lane[i]``.
 
     ``own`` is the current-lane neighborhood (lead for the old-follower
@@ -176,7 +179,7 @@ def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
     nb = tabs.query(cand_lane)
     li, lg, hl, fi, fg, hf = nb
     # self in target lane
-    a_new = _own_accel(st, cfg, cand_lane, li, lg, hl)
+    a_new = _own_accel(st, cfg, geom, scn, sp, cand_lane, nb, ctx)
 
     # new follower j: before = its current accel; after = following self
     a_j_before = jnp.where(hf, a_now[fi], 0.0)
@@ -209,18 +212,23 @@ def _mobil_candidate(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
     return incentive, safe
 
 
-def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
-                        tabs: NeighborTables):
-    """Simultaneous MOBIL decisions for main-lane vehicles."""
-    on_main = (st.lane < cfg.n_lanes) & st.active
-    can_change = on_main & (st.cooldown == 0)
+def _apply_lane_changes(st: SimState, cfg: SimConfig, geom: RoadGeometry,
+                        scn: Scenario, sp: ScenarioParams, a_now,
+                        own: Neighbors, tabs: NeighborTables, ctx=None):
+    """Simultaneous MOBIL decisions for scenario-eligible vehicles."""
+    eligible = scn.mobil_eligible(st, cfg, geom) & st.active
+    can_change = eligible & (st.cooldown == 0)
 
-    left = jnp.minimum(st.lane + 1, cfg.n_lanes - 1)
+    left = jnp.minimum(st.lane + 1, geom.n_lanes - 1)
     right = jnp.maximum(st.lane - 1, 0)
-    inc_l, safe_l = _mobil_candidate(st, cfg, a_now, own, tabs, left)
-    inc_r, safe_r = _mobil_candidate(st, cfg, a_now, own, tabs, right)
-    ok_l = safe_l & (inc_l > cfg.mobil_athr) & (left != st.lane) & can_change
-    ok_r = safe_r & (inc_r > cfg.mobil_athr) & (right != st.lane) & can_change
+    inc_l, safe_l = _mobil_candidate(st, cfg, geom, scn, sp, a_now, own,
+                                     tabs, left, ctx)
+    inc_r, safe_r = _mobil_candidate(st, cfg, geom, scn, sp, a_now, own,
+                                     tabs, right, ctx)
+    ok_l = (safe_l & (inc_l > cfg.mobil_athr) & (left != st.lane)
+            & can_change & scn.mobil_candidate_ok(st, cfg, geom, left))
+    ok_r = (safe_r & (inc_r > cfg.mobil_athr) & (right != st.lane)
+            & can_change & scn.mobil_candidate_ok(st, cfg, geom, right))
 
     go_left = ok_l & (~ok_r | (inc_l >= inc_r))
     go_right = ok_r & ~go_left
@@ -232,33 +240,17 @@ def _apply_lane_changes(st: SimState, cfg: SimConfig, a_now, own: Neighbors,
     return new_lane, cooldown, jnp.sum(changed.astype(jnp.int32))
 
 
-def _apply_ramp_merges(st: SimState, cfg: SimConfig, new_lane,
-                       tabs: NeighborTables):
-    """Gap-acceptance merge from the ramp into lane 0 inside the merge zone."""
-    on_ramp = (st.lane == cfg.n_lanes) & st.active
-    in_zone = (st.pos >= cfg.merge_start) & (st.pos <= cfg.merge_end)
-    zeros = jnp.zeros_like(st.lane)
-    _, lg, hl, _, fg, hf = tabs.query(zeros)
-    # CAVs accept tighter gaps (cooperative merging)
-    front_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_front
-    rear_need = jnp.where(st.is_cav, 0.7, 1.0) * cfg.merge_gap_rear
-    gap_ok = (
-        (jnp.where(hl, lg, INF) > front_need)
-        & (jnp.where(hf, fg, INF) > rear_need)
-    )
-    merge = on_ramp & in_zone & gap_ok
-    merged_lane = jnp.where(merge, 0, new_lane)
-    return merged_lane, jnp.sum(merge.astype(jnp.int32))
-
-
 # --------------------------------------------------------------------------
-# spawning — the demand process (per-instance randomized rates)
+# spawning — the demand process (per-instance randomized rates; the
+# scenario's boundary_spawn hook decides WHICH lanes spawn at WHAT rates)
 # --------------------------------------------------------------------------
 
-def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
-    """Bernoulli(λ·dt) arrivals per lane; claims free slots with fresh drivers.
+def _spawn(st: SimState, cfg: SimConfig, geom: RoadGeometry, scn: Scenario,
+           sp: ScenarioParams, key: jax.Array):
+    """Bernoulli(λ·dt) arrivals per spawn lane; claims free slots with fresh
+    drivers.
 
-    Fully vectorized over the ``n_lanes + 1`` spawn lanes: one uniform block
+    Fully vectorized over the scenario's spawn lanes: one uniform block
     for every per-lane draw and a rank-based free-slot allocation, instead
     of the historical Python loop (~17 tiny PRNG/scatter ops per step —
     the dominant per-step cost at small ``n_slots``). At most one vehicle
@@ -266,17 +258,24 @@ def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
     free slot in lane order, exactly like the sequential loop did.
     """
     n = st.pos.shape[0]
-    n_spawn_lanes = cfg.n_lanes + 1
-    lanes = jnp.arange(n_spawn_lanes)
+    lam, base_v0, lanes = scn.boundary_spawn(cfg, geom, sp)
+    n_spawn_lanes = lanes.shape[0]                   # static per scenario
     ku, kj = jax.random.split(key)
     u = jax.random.uniform(ku, (3, n_spawn_lanes))   # arrival, cav, v0 jitter
 
-    lam = jnp.concatenate([sp.lambda_main, sp.lambda_ramp[None]])
     arrive = u[0] < lam * cfg.dt                                   # [L]
     # headway check at the spawn point, all lanes at once
     in_lane = st.active[None, :] & (st.lane[None, :] == lanes[:, None])
     nearest = jnp.min(jnp.where(in_lane, st.pos[None, :], INF), axis=1)
     clear = nearest > cfg.spawn_gap
+    if geom.ring:
+        # on a closed road traffic also approaches the spawn point from
+        # behind, across the seam, possibly at full speed — demand braking
+        # headroom behind the seam before injecting a fresh vehicle
+        rear_gap = geom.road_len - jnp.max(
+            jnp.where(in_lane, st.pos[None, :], -INF), axis=1
+        )
+        clear = clear & (rear_gap > 3.0 * cfg.spawn_gap)
 
     # rank-based slot claim: the r-th lane that wants to spawn takes the
     # r-th-lowest free slot; lanes beyond the free-slot count miss out
@@ -289,10 +288,11 @@ def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
     slot = jnp.where(ok, free_slots[jnp.minimum(rank, n - 1)], n)  # n = drop
 
     cav = u[1] < sp.p_cav
-    base_v0 = jnp.where(lanes == cfg.n_lanes, sp.v0_ramp, sp.v0_mean)
     new_v0 = base_v0 * (0.9 + 0.2 * u[2])
     dp = driver_params(cav, kj, n_spawn_lanes)
-    init_v = jnp.minimum(new_v0, nearest / jnp.maximum(st.T[jnp.minimum(slot, n - 1)], 0.5))
+    # headway-derived entry speed uses the NEW driver's just-drawn headway
+    # (the slot may still hold a previous occupant's stale T)
+    init_v = jnp.minimum(new_v0, nearest / jnp.maximum(dp["T"], 0.5))
 
     def put(arr, val):
         return arr.at[slot].set(val.astype(arr.dtype), mode="drop")
@@ -320,56 +320,67 @@ def _spawn(st: SimState, cfg: SimConfig, sp: ScenarioParams, key: jax.Array):
 def sim_step(
     st: SimState, cfg: SimConfig, sp: ScenarioParams
 ) -> tuple[SimState, SimMetrics]:
-    """One dt step. Returns the new state and this step's metric deltas."""
+    """One dt step of ``cfg.scenario``. Returns the new state and this
+    step's metric deltas. Scenario-specific physics enters only through the
+    scenario's hooks — this function never special-cases a workload."""
+    scn = get_scenario(cfg.scenario)
+    geom = scn.geometry(cfg)
     key, k_spawn = jax.random.split(st.key)
     st = st._replace(key=key)
     impl = cfg.neighbor_impl
-    n_lanes_total = cfg.n_lanes + 1        # main lanes + ramp
+    n_lanes_total = geom.n_lanes_total
 
     # 1. pre-move snapshot: ONE fused neighborhood pass serves the own-lane
-    #    accel, both MOBIL candidate evaluations and the merge-target query
+    #    accel, both MOBIL candidate evaluations and the scenario's
+    #    lateral-rule queries (merge target, drop target, ...)
     tabs = build_tables(
         st.pos, st.lane, st.active, cfg.vehicle_len, n_lanes_total, impl
     )
+    ctx = scn.snapshot_ctx(st, cfg, geom)
     own = tabs.query(st.lane)
-    a_now = _own_accel(st, cfg, st.lane, own.lead_idx, own.lead_gap,
-                       own.has_lead)
+    a_now = _own_accel(st, cfg, geom, scn, sp, st.lane, own, ctx)
 
-    # 2. lane changes (MOBIL) + ramp merges (gap acceptance)
-    new_lane, cooldown, n_lc = _apply_lane_changes(st, cfg, a_now, own, tabs)
-    new_lane, n_merge = _apply_ramp_merges(st, cfg, new_lane, tabs)
+    # 2. lane changes: discretionary MOBIL, then the scenario's mandatory
+    #    moves (gap-acceptance merge, forced lane-drop exit, vetoes)
+    new_lane, cooldown, n_lc = _apply_lane_changes(
+        st, cfg, geom, scn, sp, a_now, own, tabs, ctx
+    )
+    new_lane, n_forced = scn.lateral_rules(st, cfg, geom, sp, tabs, new_lane)
     st = st._replace(lane=new_lane, cooldown=cooldown)
 
     # 3. post-change snapshot (second and last construction): recompute
-    #    accel on post-change lanes, integrate
+    #    accel on post-change lanes, integrate, apply boundary clamps
     nb = query_lanes(
         st.pos, st.lane, st.active, cfg.vehicle_len, st.lane, impl,
         n_lanes_total=n_lanes_total,
     )
-    accel = _own_accel(st, cfg, st.lane, nb.lead_idx, nb.lead_gap,
-                       nb.has_lead)
+    ctx2 = scn.snapshot_ctx(st, cfg, geom)   # lanes changed: fresh snapshot
+    accel = _own_accel(st, cfg, geom, scn, sp, st.lane, nb, ctx2)
     accel = jnp.where(st.active, accel, 0.0)
     vel = jnp.maximum(st.vel + accel * cfg.dt, 0.0)
     pos = st.pos + vel * cfg.dt
-    # ramp hard end: cannot drive past it without merging
-    on_ramp = st.lane == cfg.n_lanes
-    pos = jnp.where(on_ramp, jnp.minimum(pos, cfg.merge_end), pos)
-    vel = jnp.where(on_ramp & (pos >= cfg.merge_end), 0.0, vel)
+    pos, vel = scn.boundary_clamp(st, cfg, geom, pos, vel)
     st = st._replace(pos=pos, vel=vel)
 
     # 4. collisions: follower overlapping its lead → remove follower.
     #    Reuses the post-change lead assignment with the integrated
     #    positions (each vehicle vs the leader it followed during this dt)
-    #    instead of a third all-pairs construction.
+    #    instead of a third all-pairs construction. On a ring the gap is
+    #    measured with a centered wrap so a leader crossing the seam is
+    #    not a phantom collision.
     li2, hl2 = nb.lead_idx, nb.has_lead
+    dgap = st.pos[li2] - st.pos
+    if geom.ring:
+        half = 0.5 * geom.road_len
+        dgap = jnp.mod(dgap + half, geom.road_len) - half
     lg2 = jnp.where(
-        hl2, st.pos[li2] - st.pos - cfg.vehicle_len, INF - cfg.vehicle_len
+        hl2, dgap - cfg.vehicle_len, INF - cfg.vehicle_len
     )
     crashed = st.active & hl2 & (lg2 < 0.0)
     n_crash = jnp.sum(crashed.astype(jnp.int32))
 
-    # 5. exits
-    exited = st.active & (st.pos > cfg.road_len)
+    # 5. exits (scenario predicate; a ring has none)
+    exited = scn.boundary_exit(st, cfg, geom)
     n_out = jnp.sum(exited.astype(jnp.int32))
     active = st.active & ~exited & ~crashed
     st = st._replace(active=active, pos=jnp.where(active, st.pos, -INF))
@@ -381,15 +392,12 @@ def sim_step(
     )
     min_ttc = jnp.min(ttc)
 
-    # 7. ramp blockage gauge (vehicle-steps stopped at ramp end)
-    blocked = (
-        st.active & (st.lane == cfg.n_lanes)
-        & (st.pos > cfg.merge_end - 10.0) & (st.vel < 0.5)
-    )
-    n_blocked = jnp.sum(blocked.astype(jnp.int32))
+    # 7. scenario congestion gauge (ramp blockage, drop blockage, stopped
+    #    vehicles, zone occupancy — reported in the ramp_blocked_steps slot)
+    n_blocked = scn.boundary_gauge(st, cfg, geom)
 
-    # 8. demand
-    st, n_spawn = _spawn(st, cfg, sp, k_spawn)
+    # 8. demand (scenario decides spawn lanes/rates)
+    st, n_spawn = _spawn(st, cfg, geom, scn, sp, k_spawn)
     st = st._replace(t=st.t + 1)
 
     delta = SimMetrics(
@@ -398,7 +406,7 @@ def sim_step(
         speed_sum=jnp.sum(jnp.where(st.active, st.vel, 0.0)),
         speed_count=jnp.sum(st.active.astype(jnp.float32)),
         collisions=n_crash,
-        merges_ok=n_merge,
+        merges_ok=n_forced,
         ramp_blocked_steps=n_blocked,
         lane_changes=n_lc,
         min_ttc=min_ttc,

@@ -18,6 +18,7 @@ Paper mapping (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
@@ -26,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.scenario import SimConfig, ScenarioParams, sample_scenario_params
+from repro.core.scenario import SimConfig, ScenarioParams
+from repro.core.scenarios import get_scenario
 from repro.core.simulator import (
     SimState,
     SimMetrics,
@@ -45,8 +47,23 @@ class SweepConfig:
     vary_horizon: bool = False     # straggler population: horizons in
     min_horizon_frac: float = 0.5  # [frac*steps, steps]
     compaction: bool = True        # straggler mitigation (see module docstring)
+    # mixed-scenario sweep: when non-empty, instances are assigned these
+    # registered scenarios round-robin and the chunk program dispatches
+    # per-instance via lax.switch — shapes stay static, ONE compile serves
+    # the whole mix. Empty = every instance runs sim.scenario (no switch,
+    # zero overhead). Cost note: vmapping a switch over a batched selector
+    # executes every branch and select_n's the results, so a k-scenario mix
+    # does up to k× the per-chunk step work; grouping instances by scenario
+    # into separate (per-scenario-compiled) chunk calls is the optimization
+    # path if mixed-sweep throughput becomes the bottleneck (ROADMAP).
+    scenario_mix: tuple[str, ...] = ()
     # the neighborhood engine is selected per-instance-config via
     # sim.neighbor_impl (see repro.core.neighbors / launch.sweep --neighbor-impl)
+
+    @property
+    def scenarios(self) -> tuple[str, ...]:
+        """The effective scenario roster (mix, or the single sim scenario)."""
+        return tuple(self.scenario_mix) or (self.sim.scenario,)
 
 
 class SweepState(NamedTuple):
@@ -58,6 +75,7 @@ class SweepState(NamedTuple):
     horizon: jax.Array     # [N] i32
     done: jax.Array        # [N] bool — the completion bitmap
     chunk: jax.Array       # [] i32 — walltime slices executed
+    scenario_id: jax.Array # [N] i32 — index into SweepConfig.scenarios
 
 
 def _instance_sharding(mesh: Mesh | None):
@@ -73,23 +91,50 @@ class SweepRunner:
         self.cfg = cfg
         self.mesh = mesh
         self.sharding = _instance_sharding(mesh)
-        self._chunk_fn = jax.jit(
-            jax.vmap(
-                lambda st, m, sp, h: rollout_chunk(
-                    st, m, sp, h, cfg.sim, cfg.chunk_steps
-                )
-            ),
+        # one SimConfig per roster entry; every branch shares shapes, so a
+        # mixed sweep still compiles into a single SPMD program
+        self._sims = tuple(
+            dataclasses.replace(cfg.sim, scenario=s) for s in cfg.scenarios
         )
+        if len(self._sims) == 1:
+            sim0 = self._sims[0]
+
+            def chunk_one(st, m, sp, h, sid):
+                return rollout_chunk(st, m, sp, h, sim0, cfg.chunk_steps)
+        else:
+            branches = tuple(
+                functools.partial(rollout_chunk, cfg=s, n_steps=cfg.chunk_steps)
+                for s in self._sims
+            )
+
+            def chunk_one(st, m, sp, h, sid):
+                return jax.lax.switch(sid, branches, st, m, sp, h)
+
+        self._chunk_fn = jax.jit(jax.vmap(chunk_one))
 
     # ---------------- init ----------------
 
     def init(self) -> SweepState:
         cfg = self.cfg
+        sims = self._sims
         base = jax.random.key(cfg.seed)
 
         def init_one(i):
             k = jax.random.fold_in(base, i)
-            sp = sample_scenario_params(jax.random.fold_in(k, 1), cfg.sim)
+            sid = jnp.asarray(i % len(sims), jnp.int32)
+            k_sp = jax.random.fold_in(k, 1)
+            if len(sims) == 1:
+                sp = get_scenario(sims[0].scenario).sample_params(k_sp, sims[0])
+            else:
+                sp = jax.lax.switch(
+                    sid,
+                    tuple(
+                        functools.partial(get_scenario(s.scenario).sample_params,
+                                          cfg=s)
+                        for s in sims
+                    ),
+                    k_sp,
+                )
             st = init_state(cfg.sim, jax.random.fold_in(k, 2))
             if cfg.vary_horizon:
                 frac = jax.random.uniform(
@@ -99,10 +144,10 @@ class SweepRunner:
                 horizon = (frac * cfg.steps_per_instance).astype(jnp.int32)
             else:
                 horizon = jnp.asarray(cfg.steps_per_instance, jnp.int32)
-            return st, SimMetrics.zeros(), sp, horizon
+            return st, SimMetrics.zeros(), sp, horizon, sid
 
         ids = jnp.arange(cfg.n_instances)
-        sim, metrics, params, horizon = jax.jit(jax.vmap(init_one))(ids)
+        sim, metrics, params, horizon, sids = jax.jit(jax.vmap(init_one))(ids)
         state = SweepState(
             sim=sim,
             metrics=metrics,
@@ -110,6 +155,7 @@ class SweepRunner:
             horizon=horizon,
             done=jnp.zeros((cfg.n_instances,), bool),
             chunk=jnp.zeros((), jnp.int32),
+            scenario_id=sids,
         )
         return self._place(state)
 
@@ -133,7 +179,8 @@ class SweepRunner:
             state = self._run_chunk_compacted(state)
         else:
             sim, metrics = self._chunk_fn(
-                state.sim, state.metrics, state.params, state.horizon
+                state.sim, state.metrics, state.params, state.horizon,
+                state.scenario_id,
             )
             state = state._replace(sim=sim, metrics=metrics)
         done = state.sim.t >= state.horizon
@@ -158,9 +205,12 @@ class SweepRunner:
         idx = np.concatenate([pending, pending[: 1].repeat(pad)])
         take = jnp.asarray(idx)
 
-        sub = jax.tree.map(lambda x: x[take], (state.sim, state.metrics,
-                                               state.params, state.horizon))
-        sim, metrics = self._chunk_fn(*sub[:2], sub[2], sub[3])
+        sub = jax.tree.map(
+            lambda x: x[take],
+            (state.sim, state.metrics, state.params, state.horizon,
+             state.scenario_id),
+        )
+        sim, metrics = self._chunk_fn(*sub[:2], sub[2], sub[3], sub[4])
         # drop padding rows, scatter results back to logical slots
         keep = pending.size
         upd = jnp.asarray(pending)

@@ -8,6 +8,7 @@ tests and benches must keep seeing 1 device).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,10 +18,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist, as a 1-D 'workers' mesh (sweeps, examples)."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("workers",))
+def make_host_mesh(max_workers: int | None = None):
+    """Available devices as a 1-D 'workers' mesh (sweeps, examples).
+
+    ``max_workers`` caps the worker count (uses the first k devices) so a
+    launcher's ``--workers`` flag actually sizes the mesh the sweep runs
+    on, not just its failure-injection bookkeeping.
+    """
+    devs = list(jax.devices())
+    if max_workers is not None:
+        devs = devs[: max(1, min(max_workers, len(devs)))]
+    return jax.sharding.Mesh(np.asarray(devs), ("workers",))
 
 
 def make_abstract_mesh(shape, axes):

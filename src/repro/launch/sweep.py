@@ -5,6 +5,16 @@ paper's 6-node × 8-instance batch (at CPU-friendly horizons), with optional
 failure injection and checkpointing:
 
 ``python -m repro.launch.sweep --instances 48 --fail-prob 0.1 --ckpt-dir /tmp/sw``
+
+Scenario selection (the registry catalog, ``repro.core.scenarios``):
+
+``python -m repro.launch.sweep --scenario lane_drop``
+    every instance runs the lane-drop bottleneck;
+``python -m repro.launch.sweep --scenario-mix highway_merge,stop_and_go``
+    instances are assigned the listed scenarios round-robin and stepped by
+    ONE compiled program (per-instance lax.switch);
+``python -m repro.launch.sweep --scenario-mix all``
+    round-robin over every registered scenario.
 """
 
 from __future__ import annotations
@@ -17,6 +27,7 @@ from repro.ckpt import CheckpointManager
 from repro.core.aggregate import aggregate_metrics, metrics_to_records
 from repro.core.fault import FailureInjector, run_with_failures
 from repro.core.scenario import SimConfig
+from repro.core.scenarios import list_scenarios
 from repro.core.sweep import SweepConfig, SweepRunner
 from repro.launch.mesh import make_host_mesh
 
@@ -27,34 +38,61 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=1200)
     ap.add_argument("--chunk-steps", type=int, default=400)
     ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--scenario", default="highway_merge",
+                    choices=list_scenarios(),
+                    help="workload every instance runs (registry name)")
+    ap.add_argument("--scenario-mix", default=None,
+                    help="comma-separated scenario names assigned to "
+                         "instances round-robin, or 'all' for the whole "
+                         "registry (overrides --scenario)")
     ap.add_argument("--neighbor-impl", default="sort",
                     choices=["reference", "dense", "sort", "pallas"],
                     help="neighborhood engine implementation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--vary-horizon", action="store_true")
     ap.add_argument("--fail-prob", type=float, default=0.0)
-    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="cap the worker-mesh size (default: all devices); "
+                         "failure injection is sized from the actual mesh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write records JSON here")
     args = ap.parse_args()
+
+    if args.scenario_mix:
+        mix = (
+            tuple(list_scenarios())
+            if args.scenario_mix.strip() == "all"
+            else tuple(s.strip() for s in args.scenario_mix.split(",") if s.strip())
+        )
+    else:
+        mix = ()
 
     cfg = SweepConfig(
         n_instances=args.instances,
         steps_per_instance=args.steps,
         chunk_steps=args.chunk_steps,
-        sim=SimConfig(n_slots=args.slots, neighbor_impl=args.neighbor_impl),
+        sim=SimConfig(n_slots=args.slots, neighbor_impl=args.neighbor_impl,
+                      scenario=args.scenario),
         seed=args.seed,
         vary_horizon=args.vary_horizon,
+        scenario_mix=mix,
     )
-    runner = SweepRunner(cfg, mesh=make_host_mesh())
+    # the mesh is the source of truth for worker count: --workers sizes the
+    # mesh, and the injector is sized from whatever mesh actually exists
+    mesh = make_host_mesh(max_workers=args.workers)
+    runner = SweepRunner(cfg, mesh=mesh)
+    n_workers = int(mesh.devices.size)
     injector = FailureInjector.random(
-        n_workers=args.workers,
+        n_workers=n_workers,
         n_chunks=max(args.steps // args.chunk_steps * 3, 8),
         fail_prob=args.fail_prob,
         seed=args.seed,
     )
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
+    print(f"[sweep] scenarios: {', '.join(cfg.scenarios)} "
+          f"({'mixed round-robin' if len(cfg.scenarios) > 1 else 'uniform'}) "
+          f"| {n_workers} worker(s)")
     t0 = time.perf_counter()
     state, info = run_with_failures(
         runner, injector, ckpt=ckpt,
@@ -63,14 +101,20 @@ def main() -> None:
         ),
     )
     dt = time.perf_counter() - t0
-    summary = aggregate_metrics(state.metrics)
+    summary = aggregate_metrics(
+        state.metrics, scenario_ids=state.scenario_id,
+        scenario_names=cfg.scenarios,
+    )
     print(f"[sweep] done in {dt:.1f}s — completion "
           f"{info['completion_rate']*100:.0f}%, "
           f"{info['chunks_run']} chunks, "
           f"{len(info['failure_events'])} failure events")
     print(f"[sweep] {json.dumps(summary, indent=1)}")
     if args.out:
-        records = metrics_to_records(state.metrics, state.params)
+        records = metrics_to_records(
+            state.metrics, state.params,
+            scenario_ids=state.scenario_id, scenario_names=cfg.scenarios,
+        )
         with open(args.out, "w") as f:
             json.dump({"summary": summary, "records": records,
                        "fault_info": info}, f, indent=1)
