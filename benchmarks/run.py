@@ -10,8 +10,11 @@ Benchmarks:
 - parallel_vs_serial  — paper Tables 5.2/5.3 / Fig 5.2 (6×8 vs 6×1)
 - kernels             — hot-spot layers (tiled attention, simulator step)
 - roofline            — §Roofline table from dry-run artifacts
-- sweep               — steps/sec per scenario × neighbor engine
-                        (writes BENCH_sweep.json for cross-PR tracking)
+- sweep               — steps/sec per scenario × neighbor engine + mixed
+                        switch-vs-grouped dispatch suite (writes
+                        BENCH_sweep.json for cross-PR tracking; CI's
+                        bench-gate diffs a quick run against it —
+                        SWEEP_BENCH_QUICK / SWEEP_BENCH_OUT env knobs)
 """
 
 from __future__ import annotations

@@ -1,17 +1,31 @@
-"""Sweep benchmark: steps/sec per scenario × neighborhood engine.
+"""Sweep benchmark: steps/sec per scenario × neighborhood engine, plus the
+``mixed`` suite timing switch-vs-grouped dispatch on multi-scenario sweeps.
 
 Emits the usual ``name,us_per_call,derived`` CSV lines AND writes
 ``BENCH_sweep.json`` so the performance trajectory of every workload is
-tracked from PR to PR (compare the file across commits). The measured
-quantity is a jitted single-instance rollout (the unit the sweep vmaps),
-per scenario and per neighbor engine implementation.
+tracked from PR to PR (compare the file across commits; CI's bench-gate job
+diffs a quick-mode run against the committed baseline). Two measured
+quantities:
+
+- per-scenario: a jitted single-instance rollout (the unit the sweep vmaps),
+  per scenario and per neighbor engine implementation;
+- mixed: wall time of a full ``SweepRunner.run_chunk`` on 2- and 4-scenario
+  mixes under ``dispatch="switch"`` (vmapped lax.switch — every branch runs
+  for every instance) vs ``dispatch="grouped"`` (per-scenario repacked
+  calls), including the planner's host-side gather/scatter overhead. The
+  ``speedup`` field is the headline: grouped recovers the k× switch tax.
 
     PYTHONPATH=src python -m benchmarks.run --only sweep
+
+Env knobs (for CI): ``SWEEP_BENCH_QUICK=1`` shrinks steps/slots/instances to
+CI-grade cost; ``SWEEP_BENCH_OUT=path.json`` redirects the JSON (so a fresh
+run can be diffed against the committed baseline without overwriting it).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import platform
 
 import jax
@@ -20,17 +34,31 @@ from benchmarks.common import emit, timeit
 from repro.core.scenario import SimConfig, sample_scenario_params
 from repro.core.scenarios import list_scenarios
 from repro.core.simulator import rollout
+from repro.core.sweep import SweepConfig, SweepRunner
 
-STEPS = 400
-N_SLOTS = 48
-OUT_PATH = "BENCH_sweep.json"
+QUICK = os.environ.get("SWEEP_BENCH_QUICK", "") not in ("", "0")
+STEPS = 120 if QUICK else 400
+N_SLOTS = 16 if QUICK else 48
+# quick runs default to the quick baseline file so reproducing CI locally
+# can never clobber the committed full-scale trajectory
+OUT_PATH = os.environ.get(
+    "SWEEP_BENCH_OUT",
+    "BENCH_sweep_quick.json" if QUICK else "BENCH_sweep.json",
+)
+
+MIXES = {
+    "mix2": ("highway_merge", "lane_drop"),
+    "mix4": ("highway_merge", "lane_drop", "stop_and_go", "speed_limit_zone"),
+}
+# the mixed suite keeps full instance/step scale even in quick mode: the
+# dispatch comparison needs compute to dominate the per-call overhead or
+# the grouped/switch ratio collapses into dispatch noise (slots still
+# shrink, which is where the compile+step cost lives)
+MIX_INSTANCES = 16
+MIX_CHUNK_STEPS = 200
 
 
-def run() -> None:
-    impls = ["reference", "dense", "sort"]
-    if jax.default_backend() == "tpu":
-        impls.append("pallas")   # interpret mode off-TPU is not a timing
-
+def _bench_scenarios(impls) -> dict:
     results: dict[str, dict[str, dict[str, float]]] = {}
     for name in list_scenarios():
         results[name] = {}
@@ -54,15 +82,73 @@ def run() -> None:
                 f"{steps_per_s:.0f}_steps_per_s "
                 f"{steps_per_s * N_SLOTS:.0f}_veh_steps_per_s",
             )
+    return results
+
+
+def _bench_mixed() -> dict:
+    """Time one run_chunk of a mixed sweep per dispatch mode.
+
+    compaction is off so every call steps the full instance set (stable
+    repeat timing: finished instances no-op at identical cost), and the
+    measured delta is purely the dispatch strategy.
+    """
+    mixed: dict[str, dict] = {}
+    for mix_name, mix in MIXES.items():
+        entry: dict = {"scenarios": list(mix), "n_scenarios": len(mix),
+                       "n_instances": MIX_INSTANCES,
+                       "chunk_steps": MIX_CHUNK_STEPS}
+        for dispatch in ("switch", "grouped"):
+            cfg = SweepConfig(
+                n_instances=MIX_INSTANCES,
+                steps_per_instance=MIX_CHUNK_STEPS,
+                chunk_steps=MIX_CHUNK_STEPS,
+                sim=SimConfig(n_slots=N_SLOTS, neighbor_impl="sort"),
+                scenario_mix=mix,
+                compaction=False,
+                dispatch=dispatch,
+            )
+            runner = SweepRunner(cfg)
+            state = runner.init()
+            # best-of-5: the dispatch comparison is a ratio, so it needs
+            # more noise rejection than the absolute per-scenario numbers
+            t = timeit(runner.run_chunk, state, iters=5)
+            steps_per_s = MIX_CHUNK_STEPS * MIX_INSTANCES / t
+            entry[dispatch] = {
+                "seconds_per_chunk": t,
+                "steps_per_sec": steps_per_s,
+                "veh_steps_per_sec": steps_per_s * N_SLOTS,
+            }
+            emit(
+                f"sweep_{mix_name}_{dispatch}", t * 1e6,
+                f"{steps_per_s:.0f}_steps_per_s",
+            )
+        entry["speedup_grouped_over_switch"] = (
+            entry["grouped"]["steps_per_sec"] / entry["switch"]["steps_per_sec"]
+        )
+        emit(f"sweep_{mix_name}_speedup", 0.0,
+             f"{entry['speedup_grouped_over_switch']:.2f}x_grouped_over_switch")
+        mixed[mix_name] = entry
+    return mixed
+
+
+def run() -> None:
+    impls = ["reference", "dense", "sort"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")   # interpret mode off-TPU is not a timing
+
+    results = _bench_scenarios(impls)
+    mixed = _bench_mixed()
 
     payload = {
         "bench": "sweep",
         "steps": STEPS,
         "n_slots": N_SLOTS,
+        "quick": QUICK,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "platform": platform.platform(),
         "results": results,
+        "mixed": mixed,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

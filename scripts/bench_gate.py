@@ -1,0 +1,159 @@
+"""Bench-regression gate: diff a fresh BENCH_sweep.json against the baseline.
+
+CI runs a quick-mode ``benchmarks.run --only sweep`` (reduced slots/steps)
+and calls this script to compare it with the committed quick-mode baseline:
+
+    python scripts/bench_gate.py BENCH_sweep_quick.json bench_fresh.json
+
+CI compares like-with-like: the committed ``BENCH_sweep_quick.json`` was
+recorded with ``SWEEP_BENCH_QUICK=1`` so the workload size matches the CI
+run (the full-mode ``BENCH_sweep.json`` stays the PR-to-PR perf trajectory,
+re-recorded on dev hardware when perf-relevant code changes).
+
+Comparison rules (generous by design — CI-grade hardware is slower and
+noisier than wherever the baseline was recorded):
+
+- per scenario, the ``sort``-impl ``veh_steps_per_sec`` ratio vs baseline is
+  first normalized by the median ratio across scenarios (dividing out
+  uniform hardware speed differences, which are indistinguishable from a
+  global slowdown on foreign hardware); a scenario whose NORMALIZED ratio
+  regresses by more than ``--tolerance`` (default 40 %) FAILS the gate —
+  that scenario got slower *relative to the others*, which no hardware
+  difference explains. Raw-ratio dips past the tolerance only warn.
+- the mixed-suite grouped-over-switch speedup on the largest mix must stay
+  above ``--min-speedup`` (default 1.05) — grouped dispatch collapsing to
+  switch-grade throughput means the planner is broken, and that holds on any
+  hardware since both sides run on the same machine. The floor is deliberately
+  just above 1.0: quick-mode + CI noise compresses the measured ratio well
+  below the full-scale baseline (2.5x on the recording host), so larger dips
+  (below ``WARN_SPEEDUP``) only warn.
+
+A markdown summary is appended to ``$GITHUB_STEP_SUMMARY`` when set. Exit
+code 1 = hard regression, 0 = clean or warn-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+IMPL = "sort"
+METRIC = "veh_steps_per_sec"
+WARN_FRAC = 0.15
+WARN_SPEEDUP = 1.3
+
+
+def compare(base: dict, fresh: dict, tolerance: float, min_speedup: float):
+    failures: list[str] = []
+    warnings: list[str] = []
+    rows: list[tuple[str, float, float, float]] = []
+
+    base_res = base.get("results", {})
+    fresh_res = fresh.get("results", {})
+    ratios: dict[str, tuple[float, float, float]] = {}
+    for scenario in sorted(base_res):
+        b = base_res[scenario].get(IMPL, {}).get(METRIC)
+        f = fresh_res.get(scenario, {}).get(IMPL, {}).get(METRIC)
+        if b is None:
+            continue
+        if f is None:
+            failures.append(f"{scenario}: missing from fresh results")
+            continue
+        ratios[scenario] = (b, f, f / b)
+
+    # dividing by the median ratio cancels uniform hardware-speed skew;
+    # what survives is a scenario regressing relative to its peers
+    med = sorted(r for _, _, r in ratios.values())
+    med = (med[len(med) // 2] if len(med) % 2
+           else (med[len(med) // 2 - 1] + med[len(med) // 2]) / 2) if med else 1.0
+    for scenario, (b, f, ratio) in ratios.items():
+        norm = ratio / med if med > 0 else ratio
+        rows.append((scenario, b, f, norm))
+        if norm < 1.0 - tolerance:
+            failures.append(
+                f"{scenario}: {IMPL} {METRIC} regressed {1 - norm:.0%} "
+                f"relative to the other scenarios "
+                f"({b:.0f} -> {f:.0f}, median ratio {med:.2f}, "
+                f"tolerance {tolerance:.0%})"
+            )
+        elif min(norm, ratio) < 1.0 - WARN_FRAC:
+            warnings.append(
+                f"{scenario}: {IMPL} {METRIC} down (raw {ratio:.2f}x, "
+                f"normalized {norm:.2f}x; {b:.0f} -> {f:.0f}) — within "
+                f"tolerance, watch it"
+            )
+
+    mixed = fresh.get("mixed", {})
+    if mixed:
+        largest = max(mixed, key=lambda k: mixed[k].get("n_scenarios", 0))
+        speedup = mixed[largest].get("speedup_grouped_over_switch")
+        if speedup is not None:
+            rows.append((f"{largest} grouped/switch", min_speedup, speedup,
+                         speedup / min_speedup))
+            if speedup < min_speedup:
+                failures.append(
+                    f"{largest}: grouped dispatch speedup {speedup:.2f}x "
+                    f"< required {min_speedup:.2f}x over switch"
+                )
+            elif speedup < WARN_SPEEDUP:
+                warnings.append(
+                    f"{largest}: grouped speedup {speedup:.2f}x is thin "
+                    f"(full-scale baseline expects ~2.5x) — likely bench "
+                    f"noise, worth a look if persistent"
+                )
+    else:
+        warnings.append("fresh results carry no mixed suite — speedup unchecked")
+
+    return rows, warnings, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_sweep.json")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("--tolerance", type=float, default=0.40,
+                    help="max allowed fractional regression (default 0.40)")
+    ap.add_argument("--min-speedup", type=float, default=1.05,
+                    help="required grouped-over-switch speedup on the "
+                         "largest mix (default 1.05: grouped at or below "
+                         "switch throughput = broken planner)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    rows, warnings, failures = compare(base, fresh, args.tolerance,
+                                       args.min_speedup)
+
+    lines = ["## sweep bench gate", "",
+             f"baseline: `{base.get('platform', '?')}` "
+             f"(quick={base.get('quick', False)}) vs fresh: "
+             f"`{fresh.get('platform', '?')}` (quick={fresh.get('quick', False)})",
+             "", "| check | baseline | fresh | normalized ratio |",
+             "|---|---|---|---|"]
+    for name, b, f, ratio in rows:
+        fmt = ".2f" if max(abs(b), abs(f)) < 100 else ".0f"
+        lines.append(f"| {name} | {b:{fmt}} | {f:{fmt}} | {ratio:.2f} |")
+    for w in warnings:
+        lines.append(f"- ⚠️ {w}")
+    for f in failures:
+        lines.append(f"- ❌ {f}")
+    if not failures:
+        lines.append("- ✅ no hard regressions")
+    report = "\n".join(lines)
+    print(report)
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(report + "\n")
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

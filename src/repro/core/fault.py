@@ -5,6 +5,15 @@ PBS re-queues failed array elements. Here failures are *injected* (a worker's
 chunk results are discarded, as if the node died mid-slice) and the sweep loop
 re-schedules the affected instances from their last durable state; tests
 assert the completion bitmap still reaches 100 %.
+
+Failure masks and reverts operate on LOGICAL instance ids. The sweep's chunk
+execution planner (compaction + scenario grouping, ``repro.core.sweep``)
+repacks instances onto physical rows inside ``run_chunk``, but every
+``SweepState`` it returns is back in logical order — so this module is
+dispatch-agnostic by construction: the same failure plan kills the same
+instances under ``switch`` and ``grouped`` dispatch, with or without
+compaction, and trajectories stay bit-for-bit identical across modes
+(tested in tests/test_fault.py).
 """
 
 from __future__ import annotations
@@ -36,7 +45,13 @@ class FailureInjector:
         return self.plan.get(chunk, [])
 
     def instance_mask(self, chunk: int, n_instances: int) -> np.ndarray:
-        """Boolean [N]: True where the carrying worker failed this chunk."""
+        """Boolean [N] over LOGICAL instance ids: True where the carrying
+        worker failed this chunk.
+
+        The worker→instance map is the static ceil-block assignment, NOT the
+        planner's per-chunk physical packing — deliberately, so the failure
+        model (and therefore the trajectory) is independent of dispatch mode
+        and compaction."""
         mask = np.zeros((n_instances,), bool)
         per = -(-n_instances // self.n_workers)  # ceil block size
         for w in self.failed_workers(chunk):

@@ -13,6 +13,30 @@ Paper mapping (DESIGN.md §2):
 - straggler mitigation                 → instances have per-instance horizons
   (variable cost); **compaction** re-packs unfinished instances onto all
   devices between chunks so finished slots stop burning lockstep compute.
+
+Dispatch modes (``SweepConfig.dispatch``) — how a mixed-scenario chunk is
+mapped onto compiled programs:
+
+- ``"switch"``  — ONE compiled program: every instance runs a vmapped
+  ``lax.switch`` over the scenario roster. Batching a switch executes *every*
+  branch and ``select_n``'s the results, so a k-scenario mix pays up to k×
+  the per-chunk step work. Kept as the single-compile fallback and as the
+  parity oracle for ``grouped``.
+- ``"grouped"`` — the **chunk execution planner** partitions the pending
+  instances by ``scenario_id`` on the host, pads each group to the worker
+  count (padding rows are drawn from already-finished instances, whose
+  results are discarded), runs each group through its *per-scenario* jitted
+  chunk fn (no switch — each instance executes exactly one branch), and
+  scatters results back to logical slots. One compile per distinct roster
+  SimConfig, cached across chunks. This is the same host-side repacking
+  trick straggler compaction already uses, so the two are unified into one
+  plan: compaction decides *which* instances are live, grouping decides how
+  the live set is split into dense per-program batches.
+- ``"auto"``    — ``grouped`` when the roster has >1 scenario, else
+  ``switch`` (which for a single scenario is a direct call, no switch op).
+
+Both modes are bit-for-bit trajectory-equivalent (tested); ``grouped``
+recovers the k× redundancy on mixed sweeps (see BENCH_sweep.json ``mixed``).
 """
 
 from __future__ import annotations
@@ -36,6 +60,8 @@ from repro.core.simulator import (
     rollout_chunk,
 )
 
+DISPATCH_MODES = ("auto", "switch", "grouped")
+
 
 @dataclass(frozen=True)
 class SweepConfig:
@@ -48,15 +74,13 @@ class SweepConfig:
     min_horizon_frac: float = 0.5  # [frac*steps, steps]
     compaction: bool = True        # straggler mitigation (see module docstring)
     # mixed-scenario sweep: when non-empty, instances are assigned these
-    # registered scenarios round-robin and the chunk program dispatches
-    # per-instance via lax.switch — shapes stay static, ONE compile serves
-    # the whole mix. Empty = every instance runs sim.scenario (no switch,
-    # zero overhead). Cost note: vmapping a switch over a batched selector
-    # executes every branch and select_n's the results, so a k-scenario mix
-    # does up to k× the per-chunk step work; grouping instances by scenario
-    # into separate (per-scenario-compiled) chunk calls is the optimization
-    # path if mixed-sweep throughput becomes the bottleneck (ROADMAP).
+    # registered scenarios round-robin. How the mix is executed is governed
+    # by ``dispatch`` (see module docstring): "switch" runs every branch per
+    # instance inside one compile (k× step work for a k-scenario mix);
+    # "grouped" repacks instances per scenario into dense per-scenario
+    # compiled calls. Empty mix = every instance runs sim.scenario.
     scenario_mix: tuple[str, ...] = ()
+    dispatch: str = "auto"         # "switch" | "grouped" | "auto"
     # the neighborhood engine is selected per-instance-config via
     # sim.neighbor_impl (see repro.core.neighbors / launch.sweep --neighbor-impl)
 
@@ -65,9 +89,21 @@ class SweepConfig:
         """The effective scenario roster (mix, or the single sim scenario)."""
         return tuple(self.scenario_mix) or (self.sim.scenario,)
 
+    @property
+    def effective_dispatch(self) -> str:
+        """Resolve "auto": grouped pays off exactly when the roster is mixed."""
+        if self.dispatch == "auto":
+            return "grouped" if len(self.scenarios) > 1 else "switch"
+        return self.dispatch
+
 
 class SweepState(NamedTuple):
-    """Checkpointable sweep state. All arrays have a leading [N] axis."""
+    """Checkpointable sweep state. All arrays have a leading [N] axis.
+
+    The leading axis is always in LOGICAL instance order: the planner's
+    gather/scatter repacking is confined to the inside of ``run_chunk``, so
+    checkpoints, failure masks, and aggregation never see physical rows.
+    """
 
     sim: SimState          # stacked per-instance simulator states
     metrics: SimMetrics    # stacked per-instance accumulators
@@ -76,6 +112,73 @@ class SweepState(NamedTuple):
     done: jax.Array        # [N] bool — the completion bitmap
     chunk: jax.Array       # [] i32 — walltime slices executed
     scenario_id: jax.Array # [N] i32 — index into SweepConfig.scenarios
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    """One dense batch of a chunk execution plan.
+
+    ``take[:keep]`` are the logical ids whose results are kept; rows past
+    ``keep`` are padding (already-done instances when any exist — their
+    rollout is a horizon-masked no-op and the results are discarded).
+    """
+
+    roster: int        # index into SweepConfig.scenarios; -1 = mixed (switch)
+    take: np.ndarray   # [P] logical ids to gather, padded to worker multiple
+    keep: int          # number of real (non-padding) rows
+    identity: bool     # take == arange(N): gather/scatter can be skipped
+
+
+def _pad_group(idx: np.ndarray, pad_pool: np.ndarray, n_workers: int):
+    """Pad ``idx`` to a multiple of the worker count.
+
+    Padding rows come from ``pad_pool`` (finished instances, cycled) so no
+    live instance is stepped twice per chunk; only when nothing has finished
+    yet do we fall back to repeating the group's first live instance. Either
+    way the padding rows' results are dropped by the scatter.
+    """
+    pad = (-idx.size) % max(n_workers, 1)
+    if pad == 0:
+        return idx, idx.size
+    fill_src = pad_pool if pad_pool.size else idx[:1]
+    fill = np.resize(fill_src, pad)
+    return np.concatenate([idx, fill]), idx.size
+
+
+def plan_chunk(
+    done: np.ndarray,
+    scenario_ids: np.ndarray,
+    n_workers: int,
+    *,
+    grouped: bool,
+    compaction: bool,
+) -> list[GroupPlan]:
+    """Build the host-side execution plan for one chunk.
+
+    Unifies straggler compaction and scenario grouping: ``compaction``
+    selects the live set (pending instances only vs. everyone), ``grouped``
+    splits the live set into one dense batch per roster entry. Returns an
+    empty plan when nothing is pending.
+    """
+    n = done.size
+    live = np.flatnonzero(~done) if compaction else np.arange(n)
+    if live.size == 0:
+        return []
+    pad_pool = np.flatnonzero(done)
+    if grouped:
+        rosters = np.unique(scenario_ids[live])
+        groups = [(int(r), live[scenario_ids[live] == r]) for r in rosters]
+    else:
+        groups = [(-1, live)]
+    plans = []
+    for roster, idx in groups:
+        take, keep = _pad_group(idx, pad_pool, n_workers)
+        identity = take.size == n and keep == n and np.array_equal(
+            take, np.arange(n)
+        )
+        plans.append(GroupPlan(roster=roster, take=take, keep=keep,
+                               identity=identity))
+    return plans
 
 
 def _instance_sharding(mesh: Mesh | None):
@@ -88,11 +191,16 @@ class SweepRunner:
     """Drives a sweep to 100 % completion in walltime-slice chunks."""
 
     def __init__(self, cfg: SweepConfig, mesh: Mesh | None = None) -> None:
+        if cfg.dispatch not in DISPATCH_MODES:
+            raise ValueError(
+                f"dispatch must be one of {DISPATCH_MODES}, got {cfg.dispatch!r}"
+            )
         self.cfg = cfg
         self.mesh = mesh
         self.sharding = _instance_sharding(mesh)
-        # one SimConfig per roster entry; every branch shares shapes, so a
-        # mixed sweep still compiles into a single SPMD program
+        self.dispatch = cfg.effective_dispatch
+        # one SimConfig per roster entry; every branch shares shapes, so the
+        # switch path compiles a mixed sweep into a single SPMD program
         self._sims = tuple(
             dataclasses.replace(cfg.sim, scenario=s) for s in cfg.scenarios
         )
@@ -111,6 +219,16 @@ class SweepRunner:
                 return jax.lax.switch(sid, branches, st, m, sp, h)
 
         self._chunk_fn = jax.jit(jax.vmap(chunk_one))
+        # per-roster switch-free chunk fns for grouped dispatch, deduped by
+        # SimConfig so a weighted mix (same scenario listed twice) shares one
+        # compile cache entry; jit itself caches across chunks per shape
+        by_sim: dict[SimConfig, Callable] = {}
+        for s in self._sims:
+            if s not in by_sim:
+                by_sim[s] = jax.jit(jax.vmap(functools.partial(
+                    rollout_chunk, cfg=s, n_steps=cfg.chunk_steps
+                )))
+        self._roster_fns = tuple(by_sim[s] for s in self._sims)
 
     # ---------------- init ----------------
 
@@ -171,56 +289,72 @@ class SweepRunner:
 
         return jax.tree.map(put, state)
 
+    def _n_workers(self) -> int:
+        return len(self.mesh.devices.flat) if self.mesh is not None else 1
+
     # ---------------- one walltime slice ----------------
 
-    def run_chunk(self, state: SweepState) -> SweepState:
+    def plan_chunk(self, state: SweepState) -> list[GroupPlan]:
+        """The chunk execution plan for the current completion bitmap."""
         cfg = self.cfg
-        if cfg.compaction:
-            state = self._run_chunk_compacted(state)
-        else:
-            sim, metrics = self._chunk_fn(
-                state.sim, state.metrics, state.params, state.horizon,
-                state.scenario_id,
+        grouped = self.dispatch == "grouped"
+        if not cfg.compaction and not grouped:
+            # full-width switch program: no repacking needed
+            n = cfg.n_instances
+            return [GroupPlan(roster=-1, take=np.arange(n), keep=n,
+                              identity=True)]
+        # partition on the state's own assignment (not an assumed round-robin)
+        # so grouped dispatch honors whatever scenario_id a restored or
+        # hand-built state carries, like the switch program does — except
+        # that lax.switch silently clamps out-of-range ids; here that would
+        # mean stepping an instance with the wrong scenario's physics, so
+        # reject it loudly (it only happens on config drift at restore time)
+        done, sids = jax.device_get((state.done, state.scenario_id))
+        done, sids = np.asarray(done), np.asarray(sids)
+        if sids.size and (sids.min() < 0 or sids.max() >= len(self._sims)):
+            raise ValueError(
+                f"state.scenario_id out of range for a {len(self._sims)}-"
+                f"entry roster {self.cfg.scenarios} — was this state "
+                "restored from a sweep with a different scenario_mix?"
             )
-            state = state._replace(sim=sim, metrics=metrics)
+        return plan_chunk(done, sids, self._n_workers(),
+                          grouped=grouped, compaction=cfg.compaction)
+
+    def run_chunk(self, state: SweepState) -> SweepState:
+        for plan in self.plan_chunk(state):
+            state = self._run_group(state, plan)
         done = state.sim.t >= state.horizon
         return state._replace(done=done, chunk=state.chunk + 1)
 
-    def _run_chunk_compacted(self, state: SweepState) -> SweepState:
-        """Straggler mitigation: advance only unfinished instances.
-
-        Unfinished instances are gathered into a dense prefix (padded to the
-        worker count), stepped, and scattered back. Finished instances stop
-        consuming lockstep compute — all devices keep working as long as any
-        instance remains (DESIGN.md §7).
-        """
-        done = np.asarray(jax.device_get(state.done))
-        pending = np.flatnonzero(~done)
-        if pending.size == 0:
-            return state
-        n_workers = (
-            len(self.mesh.devices.flat) if self.mesh is not None else 1
-        )
-        pad = (-pending.size) % max(n_workers, 1)
-        idx = np.concatenate([pending, pending[: 1].repeat(pad)])
-        take = jnp.asarray(idx)
-
+    def _run_group(self, state: SweepState, plan: GroupPlan) -> SweepState:
+        """Gather one plan group, step it, scatter results to logical slots."""
+        fn = self._chunk_fn if plan.roster < 0 else self._roster_fns[plan.roster]
+        if plan.identity:
+            args = (state.sim, state.metrics, state.params, state.horizon)
+            sim, metrics = (
+                fn(*args, state.scenario_id) if plan.roster < 0 else fn(*args)
+            )
+            return state._replace(sim=sim, metrics=metrics)
+        take = jnp.asarray(plan.take)
         sub = jax.tree.map(
             lambda x: x[take],
-            (state.sim, state.metrics, state.params, state.horizon,
-             state.scenario_id),
+            (state.sim, state.metrics, state.params, state.horizon),
         )
-        sim, metrics = self._chunk_fn(*sub[:2], sub[2], sub[3], sub[4])
+        if plan.roster < 0:
+            sim, metrics = self._chunk_fn(*sub, state.scenario_id[take])
+        else:
+            sim, metrics = fn(*sub)
         # drop padding rows, scatter results back to logical slots
-        keep = pending.size
-        upd = jnp.asarray(pending)
+        keep = plan.keep
+        upd = jnp.asarray(plan.take[:keep])
 
         def scatter(full, part):
             return full.at[upd].set(part[:keep])
 
-        new_sim = jax.tree.map(scatter, state.sim, sim)
-        new_metrics = jax.tree.map(scatter, state.metrics, metrics)
-        return state._replace(sim=new_sim, metrics=new_metrics)
+        return state._replace(
+            sim=jax.tree.map(scatter, state.sim, sim),
+            metrics=jax.tree.map(scatter, state.metrics, metrics),
+        )
 
     # ---------------- full run with fault handling ----------------
 

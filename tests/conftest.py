@@ -1,0 +1,25 @@
+"""Shared test helpers (importable as ``from conftest import ...``)."""
+
+import jax
+import numpy as np
+
+
+def state_tree_np(state):
+    """Whole pytree as numpy (PRNG keys unwrapped) for bit-for-bit diffs."""
+    def to_np(x):
+        if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+            x.dtype, jax.dtypes.prng_key
+        ):
+            x = jax.random.key_data(x)
+        return np.asarray(jax.device_get(x))
+
+    return jax.tree.map(to_np, state)
+
+
+def assert_states_equal(a, b):
+    """Bit-for-bit equality of two pytrees with identical structure."""
+    la = jax.tree.leaves(state_tree_np(a))
+    lb = jax.tree.leaves(state_tree_np(b))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)

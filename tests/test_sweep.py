@@ -6,7 +6,12 @@ import numpy as np
 import pytest
 
 from repro.core import SimConfig
-from repro.core.sweep import SweepConfig, SweepRunner, completion_rate
+from repro.core.sweep import (
+    SweepConfig,
+    SweepRunner,
+    completion_rate,
+    plan_chunk,
+)
 from repro.core.tokens import (
     record_rollout,
     trajectory_to_tokens,
@@ -169,6 +174,79 @@ def test_single_scenario_sweep_any_registered():
         cfg = _cfg(n_instances=2, sim=SimConfig(n_slots=16, scenario=name))
         state = SweepRunner(cfg).run()
         assert completion_rate(state) == 1.0
+
+
+from conftest import assert_states_equal as _assert_states_equal
+
+
+@pytest.mark.parametrize("compaction", [True, False])
+@pytest.mark.parametrize("varied", [{}, dict(vary_horizon=True,
+                                             min_horizon_frac=0.3)])
+def test_grouped_matches_switch_bitwise(compaction, varied):
+    """Grouped dispatch is an optimization, never a semantic change: the
+    ENTIRE final SweepState tree is bit-for-bit equal to switch dispatch."""
+    kw = dict(n_instances=8, scenario_mix=MIX, compaction=compaction, **varied)
+    sw = SweepRunner(_cfg(dispatch="switch", **kw)).run()
+    gr = SweepRunner(_cfg(dispatch="grouped", **kw)).run()
+    assert completion_rate(gr) == 1.0
+    _assert_states_equal(sw, gr)
+
+
+def test_dispatch_auto_resolution():
+    assert SweepConfig(scenario_mix=MIX).effective_dispatch == "grouped"
+    assert SweepConfig().effective_dispatch == "switch"
+    assert SweepConfig(scenario_mix=MIX,
+                       dispatch="switch").effective_dispatch == "switch"
+    assert SweepConfig(dispatch="grouped").effective_dispatch == "grouped"
+    with pytest.raises(ValueError):
+        SweepRunner(_cfg(dispatch="bogus"))
+
+
+def test_grouped_single_scenario_and_weighted_mix():
+    """Grouped dispatch also works off the mixed-sweep happy path."""
+    uni = SweepRunner(_cfg(dispatch="grouped")).run()
+    assert completion_rate(uni) == 1.0
+    _assert_states_equal(uni, SweepRunner(_cfg(dispatch="switch")).run())
+
+    mix = ("stop_and_go", "stop_and_go", "highway_merge")
+    kw = dict(n_instances=6, scenario_mix=mix)
+    _assert_states_equal(SweepRunner(_cfg(dispatch="grouped", **kw)).run(),
+                         SweepRunner(_cfg(dispatch="switch", **kw)).run())
+
+
+def test_plan_chunk_groups_and_padding():
+    """Planner unit behavior: per-scenario partition of the pending set,
+    padded to worker multiples with already-done instances."""
+    done = np.array([False, True, False, False, True, False])
+    sids = np.arange(6) % 2
+    plans = plan_chunk(done, sids, 4, grouped=True, compaction=True)
+    assert [p.roster for p in plans] == [0, 1]
+    np.testing.assert_array_equal(plans[0].take[: plans[0].keep], [0, 2])
+    np.testing.assert_array_equal(plans[1].take[: plans[1].keep], [3, 5])
+    for p in plans:
+        assert p.take.size == 4 and not p.identity
+        # padding rows are drawn from the done pool, not live duplicates
+        assert set(p.take[p.keep:]) <= {1, 4}
+        assert done[p.take[p.keep:]].all()
+
+
+def test_plan_chunk_padding_without_done_pool():
+    """First chunk (nothing finished yet): fall back to repeating a live row."""
+    done = np.zeros(3, bool)
+    plans = plan_chunk(done, np.zeros(3, np.int64), 2, grouped=False,
+                       compaction=True)
+    (p,) = plans
+    assert p.take.size == 4 and p.keep == 3
+    assert p.take[-1] == p.take[0]
+
+
+def test_plan_chunk_empty_and_identity():
+    assert plan_chunk(np.ones(4, bool), np.zeros(4, np.int64), 2,
+                      grouped=True, compaction=True) == []
+    # compaction off, single group, no padding needed -> identity fast path
+    (p,) = plan_chunk(np.zeros(4, bool), np.zeros(4, np.int64), 2,
+                      grouped=False, compaction=False)
+    assert p.identity and p.keep == 4
 
 
 def test_sweep_token_dataset_shapes():
