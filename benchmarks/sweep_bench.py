@@ -14,6 +14,10 @@ quantities:
   for every instance) vs ``dispatch="grouped"`` (per-scenario repacked
   calls), including the planner's host-side gather/scatter overhead. The
   ``speedup`` field is the headline: grouped recovers the k× switch tax.
+- recording: ``run_chunk`` step rate with trajectory recording off vs on
+  (``RecordConfig(record_every=10, k_slots=8)``) — the Phase-III dataset
+  channel must stay cheap (< 15 % step-rate cost; CI's bench gate warns
+  past that and fails past 30 %).
 
     PYTHONPATH=src python -m benchmarks.run --only sweep
 
@@ -31,6 +35,7 @@ import platform
 import jax
 
 from benchmarks.common import emit, timeit
+from repro.core.record import RecordConfig
 from repro.core.scenario import SimConfig, sample_scenario_params
 from repro.core.scenarios import list_scenarios
 from repro.core.simulator import rollout
@@ -131,6 +136,46 @@ def _bench_mixed() -> dict:
     return mixed
 
 
+def _bench_recording() -> dict:
+    """Step-rate cost of the Phase-III recording channel.
+
+    Same chunk workload with recording off vs RecordConfig(record_every=10,
+    k_slots=8): the delta is the per-step channel extraction + the strided
+    buffer scatter. compaction off for stable repeat timing, single
+    scenario so the measurement isolates recording from dispatch.
+    """
+    base = dict(
+        n_instances=MIX_INSTANCES,
+        steps_per_instance=MIX_CHUNK_STEPS,
+        chunk_steps=MIX_CHUNK_STEPS,
+        sim=SimConfig(n_slots=N_SLOTS, neighbor_impl="sort"),
+        compaction=False,
+    )
+    entry: dict = {"n_instances": MIX_INSTANCES,
+                   "chunk_steps": MIX_CHUNK_STEPS,
+                   "record_every": 10, "k_slots": 8}
+    rates = {}
+    for label, rec in (
+        ("off", None),
+        ("on", RecordConfig(record_every=10, k_slots=8)),
+    ):
+        runner = SweepRunner(SweepConfig(record=rec, **base))
+        state = runner.init()
+        t = timeit(runner.run_chunk, state, iters=5)
+        rates[label] = MIX_CHUNK_STEPS * MIX_INSTANCES / t
+        entry[label] = {
+            "seconds_per_chunk": t,
+            "steps_per_sec": rates[label],
+            "veh_steps_per_sec": rates[label] * N_SLOTS,
+        }
+        emit(f"sweep_record_{label}", t * 1e6,
+             f"{rates[label]:.0f}_steps_per_s")
+    entry["overhead_frac"] = 1.0 - rates["on"] / rates["off"]
+    emit("sweep_record_overhead", 0.0,
+         f"{entry['overhead_frac']*100:.1f}pct_step_rate_cost")
+    return entry
+
+
 def run() -> None:
     impls = ["reference", "dense", "sort"]
     if jax.default_backend() == "tpu":
@@ -138,6 +183,7 @@ def run() -> None:
 
     results = _bench_scenarios(impls)
     mixed = _bench_mixed()
+    recording = _bench_recording()
 
     payload = {
         "bench": "sweep",
@@ -149,6 +195,7 @@ def run() -> None:
         "platform": platform.platform(),
         "results": results,
         "mixed": mixed,
+        "recording": recording,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

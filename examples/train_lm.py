@@ -30,8 +30,14 @@ def main() -> None:
     ap.add_argument("--n-layers", type=int, default=8)
     ap.add_argument("--data", choices=["synthetic", "sim"],
                     default="synthetic")
+    ap.add_argument("--shard-dir", default=None,
+                    help="train on a sharded Phase-III dataset directory "
+                         "(written by repro.launch.sweep --dataset-dir; "
+                         "implies --data sim)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+    if args.shard_dir:
+        args.data = "sim"
 
     base = get_arch(args.arch)
     pat = len(base.layer_pattern)
@@ -56,7 +62,8 @@ def main() -> None:
     )
     if args.data == "sim":
         data = sim_token_batches(
-            cfg, SimConfig(n_slots=32), batch=args.batch, seq=args.seq
+            cfg, SimConfig(n_slots=32), batch=args.batch, seq=args.seq,
+            shard_dir=args.shard_dir,
         )
     else:
         data = synthetic_batches(cfg, batch=args.batch, seq=args.seq)

@@ -43,6 +43,11 @@ IMPL = "sort"
 METRIC = "veh_steps_per_sec"
 WARN_FRAC = 0.15
 WARN_SPEEDUP = 1.3
+# Phase-III recording channel: the acceptance target is < 15 % step-rate
+# cost at record_every=10; warn past that, hard-fail only past 30 % (CI
+# noise headroom — both sides of the ratio run on the same machine)
+WARN_RECORD_OVERHEAD = 0.15
+MAX_RECORD_OVERHEAD = 0.30
 
 
 def compare(base: dict, fresh: dict, tolerance: float, min_speedup: float):
@@ -105,6 +110,22 @@ def compare(base: dict, fresh: dict, tolerance: float, min_speedup: float):
                 )
     else:
         warnings.append("fresh results carry no mixed suite — speedup unchecked")
+
+    recording = fresh.get("recording", {})
+    overhead = recording.get("overhead_frac")
+    if overhead is not None:
+        rows.append(("recording overhead", MAX_RECORD_OVERHEAD, overhead,
+                     1.0 - overhead))
+        if overhead > MAX_RECORD_OVERHEAD:
+            failures.append(
+                f"recording: {overhead:.0%} step-rate cost at "
+                f"record_every=10 > hard limit {MAX_RECORD_OVERHEAD:.0%}"
+            )
+        elif overhead > WARN_RECORD_OVERHEAD:
+            warnings.append(
+                f"recording: {overhead:.0%} step-rate cost exceeds the "
+                f"{WARN_RECORD_OVERHEAD:.0%} target — watch it"
+            )
 
     return rows, warnings, failures
 

@@ -41,8 +41,10 @@ from repro.core.simulator import (
     init_state,
     sim_step,
     rollout_chunk,
+    rollout_chunk_rec,
     rollout,
 )
+from repro.core.record import RecordConfig, TraceBuffer
 
 __all__ = [
     "SimConfig",
@@ -64,5 +66,8 @@ __all__ = [
     "init_state",
     "sim_step",
     "rollout_chunk",
+    "rollout_chunk_rec",
     "rollout",
+    "RecordConfig",
+    "TraceBuffer",
 ]

@@ -25,10 +25,60 @@ from repro.core.scenario import ScenarioParams
 from repro.core.scenarios import get_scenario
 
 
-def _scenario_of(i: int, scenario_ids, scenario_names) -> str | None:
-    if scenario_ids is None or scenario_names is None:
-        return None
-    return scenario_names[int(scenario_ids[i])]
+# columnar layout shared by metrics_to_columns / metrics_to_records and the
+# shard writer — ordered exactly as records have always been keyed
+_METRIC_COLUMNS = (
+    "throughput", "spawned", "mean_speed", "collisions", "merges_ok",
+    "ramp_blocked_steps", "lane_changes", "min_ttc", "steps",
+)
+_PARAM_COLUMNS = (
+    "lambda_main", "lambda_ramp", "p_cav", "v0_mean", "aux0", "aux1",
+)
+
+
+def _bcast(x: np.ndarray, n: int) -> np.ndarray:
+    """Per-instance column even when a param leaf was sampled as a scalar."""
+    x = np.asarray(x)
+    return np.broadcast_to(x, (n,) + x.shape[1:]) if x.ndim else np.full(n, x)
+
+
+def metrics_to_columns(
+    metrics: SimMetrics,
+    params: ScenarioParams | None = None,
+    scenario_ids: Any = None,
+    scenario_names: Sequence[str] | None = None,
+) -> dict[str, np.ndarray]:
+    """Stacked [N] metrics → columnar numpy dataset (fully vectorized).
+
+    This is the dataset-writer's native layout (one array per field, no
+    per-instance Python) and the engine under :func:`metrics_to_records`.
+    Integer columns come out i64, float columns f32/f64; ``lambda_main`` is
+    the one 2-D column ([N, n_lanes]).
+    """
+    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
+    n = m.throughput.shape[0]
+    cols: dict[str, np.ndarray] = {"instance": np.arange(n, dtype=np.int64)}
+    cols["throughput"] = m.throughput.astype(np.int64)
+    cols["spawned"] = m.spawned.astype(np.int64)
+    cols["mean_speed"] = (
+        m.speed_sum / np.maximum(m.speed_count, 1.0)
+    ).astype(np.float64)
+    cols["collisions"] = m.collisions.astype(np.int64)
+    cols["merges_ok"] = m.merges_ok.astype(np.int64)
+    cols["ramp_blocked_steps"] = m.ramp_blocked_steps.astype(np.int64)
+    cols["lane_changes"] = m.lane_changes.astype(np.int64)
+    cols["min_ttc"] = m.min_ttc.astype(np.float64)
+    cols["steps"] = m.steps.astype(np.int64)
+    if scenario_ids is not None and scenario_names is not None:
+        ids = np.asarray(jax.device_get(scenario_ids)).astype(np.int64)
+        cols["scenario_id"] = ids
+        cols["scenario"] = np.asarray(scenario_names, dtype=object)[ids]
+    if params is not None:
+        p = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
+        cols["lambda_main"] = _bcast(p.lambda_main, n).astype(np.float64)
+        for name in ("lambda_ramp", "p_cav", "v0_mean", "aux0", "aux1"):
+            cols[name] = _bcast(getattr(p, name), n).astype(np.float64)
+    return cols
 
 
 def metrics_to_records(
@@ -37,49 +87,46 @@ def metrics_to_records(
     scenario_ids: Any = None,
     scenario_names: Sequence[str] | None = None,
 ) -> list[dict[str, Any]]:
-    """Stacked [N] metrics → list of per-instance dict records."""
-    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), metrics)
-    n = m.throughput.shape[0]
-    p = (
-        jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
-        if params is not None
-        else None
+    """Stacked [N] metrics → list of per-instance dict records.
+
+    Built on :func:`metrics_to_columns`: every numeric conversion happens
+    as one bulk ``.tolist()`` per column instead of the historical
+    per-instance ``int()``/``float()`` calls (which dominated at N≥10k).
+    The dict-per-instance output shape and key order are unchanged.
+    """
+    return records_from_columns(
+        metrics_to_columns(metrics, params, scenario_ids, scenario_names)
     )
-    if scenario_ids is not None:
-        scenario_ids = np.asarray(jax.device_get(scenario_ids))
-    records = []
-    for i in range(n):
-        rec = {
-            "instance": i,
-            "throughput": int(m.throughput[i]),
-            "spawned": int(m.spawned[i]),
-            "mean_speed": float(
-                m.speed_sum[i] / max(float(m.speed_count[i]), 1.0)
-            ),
-            "collisions": int(m.collisions[i]),
-            "merges_ok": int(m.merges_ok[i]),
-            "ramp_blocked_steps": int(m.ramp_blocked_steps[i]),
-            "lane_changes": int(m.lane_changes[i]),
-            "min_ttc": float(m.min_ttc[i]),
-            "steps": int(m.steps[i]),
+
+
+def records_from_columns(cols: dict[str, np.ndarray]) -> list[dict[str, Any]]:
+    """:func:`metrics_to_columns` output → per-instance dict records (for
+    callers that already built the columns, e.g. the shard writer)."""
+    n = cols["instance"].shape[0]
+    has_scenario = "scenario" in cols
+    has_params = "lambda_main" in cols
+    # bulk-convert to Python scalars/lists once per column
+    base_keys = ("instance",) + _METRIC_COLUMNS
+    lists = {k: cols[k].tolist() for k in base_keys}
+    if has_scenario:
+        names = cols["scenario"].tolist()
+        aliases = {
+            name: get_scenario(name).metric_aliases
+            for name in dict.fromkeys(names)
         }
-        name = _scenario_of(i, scenario_ids, scenario_names)
-        if name is not None:
-            rec["scenario"] = name
+    if has_params:
+        lists.update({k: cols[k].tolist() for k in _PARAM_COLUMNS})
+    records: list[dict[str, Any]] = []
+    for i in range(n):
+        rec = {k: lists[k][i] for k in base_keys}
+        if has_scenario:
+            rec["scenario"] = names[i]
             # surface the scenario's meaning of the generic metric slots
-            for generic, alias in get_scenario(name).metric_aliases.items():
+            for generic, alias in aliases[names[i]].items():
                 rec[alias] = rec[generic]
-        if p is not None:
-            rec.update(
-                lambda_main=[float(x) for x in np.atleast_1d(p.lambda_main[i])],
-                lambda_ramp=float(p.lambda_ramp[i]),
-                p_cav=float(p.p_cav[i]),
-                v0_mean=float(p.v0_mean[i]),
-                aux0=float(np.atleast_1d(p.aux0)[i])
-                if np.ndim(p.aux0) else float(p.aux0),
-                aux1=float(np.atleast_1d(p.aux1)[i])
-                if np.ndim(p.aux1) else float(p.aux1),
-            )
+        if has_params:
+            for k in _PARAM_COLUMNS:
+                rec[k] = lists[k][i]
         records.append(rec)
     return records
 

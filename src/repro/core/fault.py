@@ -95,12 +95,17 @@ def run_with_failures(
     state: SweepState | None = None,
     max_chunks: int = 10_000,
     on_progress: Callable[[int, float], None] | None = None,
+    writer=None,
 ) -> tuple[SweepState, dict]:
     """Full fault-tolerant run loop.
 
     Per chunk: snapshot (durable state) → run chunk → inject failures
-    (revert the killed workers' instances to the snapshot) → checkpoint.
-    Returns the final state plus bookkeeping (chunks run, failure events,
+    (revert the killed workers' instances to the snapshot) → checkpoint →
+    drain finished instances to ``writer`` (a
+    :class:`repro.data.shards.DatasetWriter`, for recording sweeps). The
+    drain runs strictly after failure injection, so a ``done`` bit can no
+    longer be reverted once an instance is handed to the writer. Returns
+    the final state plus bookkeeping (chunks run, failure events,
     completion rate — the paper's §5.2 numbers).
     """
     if state is None:
@@ -126,9 +131,18 @@ def run_with_failures(
                            "instances": int(mask.sum())})
         if ckpt is not None:
             ckpt.save(int(jax.device_get(state.chunk)), state)
+        if writer is not None:
+            writer.drain(state)
         if on_progress is not None:
             done = float(jax.device_get(jnp.mean(state.done.astype(jnp.float32))))
             on_progress(c, done)
+    if writer is not None:
+        # the loop breaks BEFORE running a chunk when everything is already
+        # done — e.g. resuming a finished sweep's checkpoint, or a kill that
+        # landed between the final ckpt.save and its drain. Drain is
+        # idempotent (persisted instances are skipped), so one final call
+        # closes that window and keeps the no-dropped-rows guarantee.
+        writer.drain(state)
     completion = float(
         jax.device_get(jnp.mean(state.done.astype(jnp.float32)))
     )

@@ -1,0 +1,180 @@
+"""Streaming trajectory recording — the Phase-III dataset subsystem.
+
+The paper's pipeline exists so users can "generate massive datasets from
+their simulations" (§2.10, Phase III). Terminal :class:`SimMetrics` scalars
+are a digest, not a dataset: ML wants *time series*. This module adds a
+recording channel to the sweep engine:
+
+- :class:`RecordConfig` — a static (hashable, jit-compile-time) description
+  of what to record: named scalar channels (speeds, flows, lane-change and
+  safety counters — see :data:`FIELD_CHANNELS`), a ``record_every`` step
+  stride, and the first ``k_slots`` vehicle slots' (lane, speed, active)
+  trajectory used by the token serializer (:mod:`repro.core.tokens`).
+- :class:`TraceBuffer` — a fixed-shape per-instance row buffer the rollout
+  fills on-device. Rows are indexed by **absolute step count**
+  (row ``r`` holds the snapshot after step ``(r+1)·record_every``), so a
+  write is a pure function of the instance's simulation state:
+
+  * chunk boundaries don't matter (chunk-size invariance holds bitwise),
+  * a re-executed chunk (fault revert, checkpoint resume) rewrites the
+    same rows with identical values — recording never drops or duplicates
+    a row, by construction,
+  * the buffer rides :class:`~repro.core.sweep.SweepState` in LOGICAL
+    instance order through the chunk planner's gather/scatter, so it is
+    dispatch-agnostic across ``switch``/``grouped``/compaction for free.
+
+The sweep loop drains completed instances' rows to host at chunk
+boundaries (:class:`repro.data.shards.DatasetWriter`), turning every sweep
+into a sharded, resumable dataset.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Scalar channels recordable per sampled step. Each extractor maps the
+# *post-step* (state, accumulated-metrics) pair to one f32 scalar. Counter
+# channels record the CUMULATIVE value at the sampled step — windowed rates
+# (flow, lane-change rate, crash rate) are recovered by differencing rows,
+# and cumulative values make re-executed chunks trivially idempotent.
+FIELD_CHANNELS = {
+    "mean_speed": lambda st, m: (
+        jnp.sum(jnp.where(st.active, st.vel, 0.0))
+        / jnp.maximum(jnp.sum(st.active.astype(jnp.float32)), 1.0)
+    ),
+    "active_count": lambda st, m: jnp.sum(st.active.astype(jnp.float32)),
+    "throughput": lambda st, m: m.throughput.astype(jnp.float32),
+    "spawned": lambda st, m: m.spawned.astype(jnp.float32),
+    "lane_changes": lambda st, m: m.lane_changes.astype(jnp.float32),
+    "merges_ok": lambda st, m: m.merges_ok.astype(jnp.float32),
+    "collisions": lambda st, m: m.collisions.astype(jnp.float32),
+    "ramp_blocked_steps": lambda st, m: (
+        m.ramp_blocked_steps.astype(jnp.float32)
+    ),
+    "min_ttc": lambda st, m: m.min_ttc,
+}
+
+DEFAULT_FIELDS = (
+    "mean_speed",
+    "active_count",
+    "throughput",
+    "lane_changes",
+    "collisions",
+    "min_ttc",
+)
+
+
+@dataclass(frozen=True)
+class RecordConfig:
+    """Static recording description (a jit compile-time constant).
+
+    ``fields`` name scalar channels from :data:`FIELD_CHANNELS`; ``k_slots``
+    vehicle slots additionally record (lane, speed, active) per sampled step
+    — the token-stream channels. ``record_every`` is the sampling stride in
+    physics steps: row ``r`` is the snapshot after step
+    ``(r+1)*record_every``.
+    """
+
+    record_every: int = 10
+    fields: tuple[str, ...] = DEFAULT_FIELDS
+    k_slots: int = 0
+
+    def __post_init__(self) -> None:
+        if self.record_every < 1:
+            raise ValueError(f"record_every must be >= 1, got {self.record_every}")
+        if self.k_slots < 0:
+            raise ValueError(f"k_slots must be >= 0, got {self.k_slots}")
+        unknown = [f for f in self.fields if f not in FIELD_CHANNELS]
+        if unknown:
+            raise ValueError(
+                f"unknown record fields {unknown}; known: "
+                f"{sorted(FIELD_CHANNELS)}"
+            )
+        if not self.fields and not self.k_slots:
+            raise ValueError("RecordConfig records nothing: empty fields "
+                             "and k_slots=0")
+
+    def n_rows(self, steps: int) -> int:
+        """Rows a horizon of ``steps`` fills (only complete strides)."""
+        return steps // self.record_every
+
+
+class TraceBuffer(NamedTuple):
+    """Per-instance recorded time series (vmapped to a leading [N] axis).
+
+    ``series[r, f]`` is channel ``fields[f]`` after step
+    ``(r+1)*record_every``; ``lane/speed/active[r, k]`` are the first
+    ``k_slots`` vehicle slots at the same instant. Rows beyond the
+    instance's ``horizon // record_every`` stay at their zero fill — the
+    valid-row count is derived from the horizon, never stored.
+    """
+
+    series: jax.Array  # [R, F] f32
+    lane: jax.Array    # [R, K] i32
+    speed: jax.Array   # [R, K] f32
+    active: jax.Array  # [R, K] bool
+
+    @staticmethod
+    def zeros(rec: RecordConfig, steps: int) -> "TraceBuffer":
+        r = rec.n_rows(steps)
+        k = rec.k_slots
+        return TraceBuffer(
+            series=jnp.zeros((r, len(rec.fields)), jnp.float32),
+            lane=jnp.zeros((r, k), jnp.int32),
+            speed=jnp.zeros((r, k), jnp.float32),
+            active=jnp.zeros((r, k), bool),
+        )
+
+
+def batch_zeros(rec: RecordConfig, steps: int, n_instances: int) -> TraceBuffer:
+    """[N]-stacked empty buffers (the sweep's initial ``SweepState.trace``)."""
+    proto = TraceBuffer.zeros(rec, steps)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_instances,) + x.shape, x.dtype), proto
+    )
+
+
+def record_step(
+    tr: TraceBuffer, st, m, rec: RecordConfig, emit: jax.Array
+) -> TraceBuffer:
+    """Write one row if ``emit`` and the state sits on the stride.
+
+    ``st``/``m`` are the *post-step* state and accumulated metrics
+    (``st.t`` already incremented). ``emit`` must be False for stale
+    states (an instance past its horizon). Off-stride or non-emitting
+    writes target an out-of-range row that ``mode="drop"`` discards, so
+    the emitted program is branch-free (vmap/scan friendly).
+
+    Called once per physics step on the fallback path, or once per
+    stride *window* on the fast path (see
+    :func:`repro.core.simulator.rollout_chunk_rec`) — either way the row
+    is a pure function of the instance's simulation state, which is what
+    every parity property rests on.
+    """
+    n_rows = tr.series.shape[0]
+    t1 = st.t
+    emit = emit & (jnp.mod(t1, rec.record_every) == 0)
+    idx = jnp.where(emit, t1 // rec.record_every - 1, n_rows)
+    vals = (
+        jnp.stack([FIELD_CHANNELS[f](st, m) for f in rec.fields])
+        if rec.fields
+        else jnp.zeros((0,), jnp.float32)
+    )
+    tr = tr._replace(series=tr.series.at[idx].set(vals, mode="drop"))
+    if rec.k_slots:
+        k = rec.k_slots
+        tr = tr._replace(
+            lane=tr.lane.at[idx].set(st.lane[:k], mode="drop"),
+            speed=tr.speed.at[idx].set(st.vel[:k], mode="drop"),
+            active=tr.active.at[idx].set(st.active[:k], mode="drop"),
+        )
+    return tr
+
+
+def valid_rows(horizon, record_every: int):
+    """Per-instance count of filled rows (works on numpy or jnp arrays)."""
+    return horizon // record_every

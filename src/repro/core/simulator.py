@@ -434,7 +434,91 @@ def _acc(m: SimMetrics, d: SimMetrics) -> SimMetrics:
 # rollouts
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
+@functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "rec"))
+def rollout_chunk_rec(
+    st: SimState,
+    metrics: SimMetrics,
+    sp: ScenarioParams,
+    horizon: jax.Array,
+    trace,
+    cfg: SimConfig,
+    n_steps: int,
+    rec=None,
+):
+    """Advance ``n_steps`` (one walltime slice). Steps past ``horizon`` no-op.
+
+    The per-instance ``horizon`` makes instances genuinely variable-cost —
+    the straggler population the sweep scheduler must handle (DESIGN.md §7).
+
+    With a :class:`repro.core.record.RecordConfig` ``rec`` (static), the
+    rollout also fills ``trace`` (a :class:`repro.core.record.TraceBuffer`):
+    rows are indexed by absolute step count, so recording is invariant to
+    chunk boundaries and idempotent under re-execution (fault revert,
+    checkpoint resume). With ``rec=None``, ``trace`` must be None and rides
+    through untouched.
+
+    Recording cost: when ``n_steps`` is a multiple of the stride, the scan
+    is two-level — an outer scan over stride windows whose inner scan is
+    the plain physics loop — so ALL recording work (channel extraction +
+    buffer writes) runs once per window, not once per step. This relies on
+    live instances entering a chunk at a stride-aligned step count, which
+    every sweep path guarantees (``t`` only ever advances in whole chunks,
+    and ``SweepConfig`` chunking makes chunk boundaries stride-aligned
+    whenever this fast path is selected). Otherwise a per-step fallback
+    records at identical bit-for-bit rows at ~1 extra write per step.
+    """
+    from repro.core.record import record_step  # deferred: no import cycle
+
+    def step_body(carry, _):
+        st, m = carry
+        live = st.t < horizon
+        st2, d = sim_step(st, cfg, sp)
+        m2 = _acc(m, d)
+        st = jax.tree.map(lambda a, b: jnp.where(live, b, a), st, st2)
+        m = jax.tree.map(lambda a, b: jnp.where(live, b, a), m, m2)
+        return (st, m), None
+
+    if rec is None:
+        (st, metrics), _ = jax.lax.scan(
+            step_body, (st, metrics), None, length=n_steps
+        )
+        return st, metrics, trace
+
+    stride = rec.record_every
+    if n_steps % stride == 0:
+        # fast path: record once per stride window (see docstring)
+        def window(carry, _):
+            st, m, tr = carry
+            t0 = st.t
+            (st, m), _ = jax.lax.scan(step_body, (st, m), None, length=stride)
+            # an instance frozen at its horizon for the whole window must
+            # not re-emit its final row every subsequent window
+            tr = record_step(tr, st, m, rec, st.t > t0)
+            return (st, m, tr), None
+
+        (st, metrics, trace), _ = jax.lax.scan(
+            window, (st, metrics, trace), None, length=n_steps // stride
+        )
+        return st, metrics, trace
+
+    def body(carry, _):
+        st, m, tr = carry
+        live = st.t < horizon
+        st2, d = sim_step(st, cfg, sp)
+        m2 = _acc(m, d)
+        # off-stride and not-live writes drop; live re-writes after a
+        # revert reproduce identical rows (determinism)
+        tr = record_step(tr, st2, m2, rec, live)
+        st = jax.tree.map(lambda a, b: jnp.where(live, b, a), st, st2)
+        m = jax.tree.map(lambda a, b: jnp.where(live, b, a), m, m2)
+        return (st, m, tr), None
+
+    (st, metrics, trace), _ = jax.lax.scan(
+        body, (st, metrics, trace), None, length=n_steps
+    )
+    return st, metrics, trace
+
+
 def rollout_chunk(
     st: SimState,
     metrics: SimMetrics,
@@ -443,23 +527,10 @@ def rollout_chunk(
     cfg: SimConfig,
     n_steps: int,
 ) -> tuple[SimState, SimMetrics]:
-    """Advance ``n_steps`` (one walltime slice). Steps past ``horizon`` no-op.
-
-    The per-instance ``horizon`` makes instances genuinely variable-cost —
-    the straggler population the sweep scheduler must handle (DESIGN.md §7).
-    """
-
-    def body(carry, _):
-        st, m = carry
-        live = st.t < horizon
-        st2, d = sim_step(st, cfg, sp)
-        st = jax.tree.map(lambda a, b: jnp.where(live, b, a), st, st2)
-        m = jax.tree.map(
-            lambda a, b: jnp.where(live, b, a), m, _acc(m, d)
-        )
-        return (st, m), None
-
-    (st, metrics), _ = jax.lax.scan(body, (st, metrics), None, length=n_steps)
+    """Recording-free chunk rollout (see :func:`rollout_chunk_rec`)."""
+    st, metrics, _ = rollout_chunk_rec(
+        st, metrics, sp, horizon, None, cfg, n_steps, None
+    )
     return st, metrics
 
 

@@ -51,13 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.record import RecordConfig, TraceBuffer, batch_zeros
 from repro.core.scenario import SimConfig, ScenarioParams
 from repro.core.scenarios import get_scenario
 from repro.core.simulator import (
     SimState,
     SimMetrics,
     init_state,
-    rollout_chunk,
+    rollout_chunk_rec,
 )
 
 DISPATCH_MODES = ("auto", "switch", "grouped")
@@ -83,6 +84,10 @@ class SweepConfig:
     dispatch: str = "auto"         # "switch" | "grouped" | "auto"
     # the neighborhood engine is selected per-instance-config via
     # sim.neighbor_impl (see repro.core.neighbors / launch.sweep --neighbor-impl)
+    # trajectory recording (repro.core.record): None = terminal metrics only;
+    # a RecordConfig makes every chunk also fill SweepState.trace — the
+    # per-instance time series the Phase-III dataset pipeline shards out
+    record: RecordConfig | None = None
 
     @property
     def scenarios(self) -> tuple[str, ...]:
@@ -112,6 +117,10 @@ class SweepState(NamedTuple):
     done: jax.Array        # [N] bool — the completion bitmap
     chunk: jax.Array       # [] i32 — walltime slices executed
     scenario_id: jax.Array # [N] i32 — index into SweepConfig.scenarios
+    # recorded time series ([N]-stacked TraceBuffer) when
+    # SweepConfig.record is set, else None (an empty pytree subtree, so
+    # every tree.map/checkpoint/revert path handles both transparently)
+    trace: TraceBuffer | None = None
 
 
 @dataclass(frozen=True)
@@ -204,19 +213,26 @@ class SweepRunner:
         self._sims = tuple(
             dataclasses.replace(cfg.sim, scenario=s) for s in cfg.scenarios
         )
+        # every chunk fn threads the trace (None when recording is off); the
+        # RecordConfig is shared by all roster entries so lax.switch branches
+        # return identical trees
+        rec = cfg.record
         if len(self._sims) == 1:
             sim0 = self._sims[0]
 
-            def chunk_one(st, m, sp, h, sid):
-                return rollout_chunk(st, m, sp, h, sim0, cfg.chunk_steps)
+            def chunk_one(st, m, sp, h, tr, sid):
+                return rollout_chunk_rec(
+                    st, m, sp, h, tr, sim0, cfg.chunk_steps, rec
+                )
         else:
             branches = tuple(
-                functools.partial(rollout_chunk, cfg=s, n_steps=cfg.chunk_steps)
+                functools.partial(rollout_chunk_rec, cfg=s,
+                                  n_steps=cfg.chunk_steps, rec=rec)
                 for s in self._sims
             )
 
-            def chunk_one(st, m, sp, h, sid):
-                return jax.lax.switch(sid, branches, st, m, sp, h)
+            def chunk_one(st, m, sp, h, tr, sid):
+                return jax.lax.switch(sid, branches, st, m, sp, h, tr)
 
         self._chunk_fn = jax.jit(jax.vmap(chunk_one))
         # per-roster switch-free chunk fns for grouped dispatch, deduped by
@@ -226,7 +242,7 @@ class SweepRunner:
         for s in self._sims:
             if s not in by_sim:
                 by_sim[s] = jax.jit(jax.vmap(functools.partial(
-                    rollout_chunk, cfg=s, n_steps=cfg.chunk_steps
+                    rollout_chunk_rec, cfg=s, n_steps=cfg.chunk_steps, rec=rec
                 )))
         self._roster_fns = tuple(by_sim[s] for s in self._sims)
 
@@ -266,6 +282,11 @@ class SweepRunner:
 
         ids = jnp.arange(cfg.n_instances)
         sim, metrics, params, horizon, sids = jax.jit(jax.vmap(init_one))(ids)
+        trace = (
+            batch_zeros(cfg.record, cfg.steps_per_instance, cfg.n_instances)
+            if cfg.record is not None
+            else None
+        )
         state = SweepState(
             sim=sim,
             metrics=metrics,
@@ -274,6 +295,7 @@ class SweepRunner:
             done=jnp.zeros((cfg.n_instances,), bool),
             chunk=jnp.zeros((), jnp.int32),
             scenario_id=sids,
+            trace=trace,
         )
         return self._place(state)
 
@@ -327,23 +349,31 @@ class SweepRunner:
         return state._replace(done=done, chunk=state.chunk + 1)
 
     def _run_group(self, state: SweepState, plan: GroupPlan) -> SweepState:
-        """Gather one plan group, step it, scatter results to logical slots."""
+        """Gather one plan group, step it, scatter results to logical slots.
+
+        The trace buffer rides the same gather/scatter as sim/metrics
+        (``state.trace`` is None when recording is off — an empty subtree
+        every tree.map here passes through untouched), which is what makes
+        recording dispatch-agnostic by construction.
+        """
         fn = self._chunk_fn if plan.roster < 0 else self._roster_fns[plan.roster]
         if plan.identity:
-            args = (state.sim, state.metrics, state.params, state.horizon)
-            sim, metrics = (
+            args = (state.sim, state.metrics, state.params, state.horizon,
+                    state.trace)
+            sim, metrics, trace = (
                 fn(*args, state.scenario_id) if plan.roster < 0 else fn(*args)
             )
-            return state._replace(sim=sim, metrics=metrics)
+            return state._replace(sim=sim, metrics=metrics, trace=trace)
         take = jnp.asarray(plan.take)
         sub = jax.tree.map(
             lambda x: x[take],
-            (state.sim, state.metrics, state.params, state.horizon),
+            (state.sim, state.metrics, state.params, state.horizon,
+             state.trace),
         )
         if plan.roster < 0:
-            sim, metrics = self._chunk_fn(*sub, state.scenario_id[take])
+            sim, metrics, trace = self._chunk_fn(*sub, state.scenario_id[take])
         else:
-            sim, metrics = fn(*sub)
+            sim, metrics, trace = fn(*sub)
         # drop padding rows, scatter results back to logical slots
         keep = plan.keep
         upd = jnp.asarray(plan.take[:keep])
@@ -354,6 +384,7 @@ class SweepRunner:
         return state._replace(
             sim=jax.tree.map(scatter, state.sim, sim),
             metrics=jax.tree.map(scatter, state.metrics, metrics),
+            trace=jax.tree.map(scatter, state.trace, trace),
         )
 
     # ---------------- full run with fault handling ----------------

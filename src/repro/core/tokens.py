@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.scenario import SimConfig, ScenarioParams
 from repro.core.simulator import SimState, SimMetrics, sim_step, init_state, _acc
@@ -68,23 +69,72 @@ def record_rollout(
     return metrics, Trajectory(lanes[sl], vels[sl], actives[sl])
 
 
+def _frame_tokens(lane, speed, active, cfg: SimConfig, n_buckets: int,
+                  v_max: float) -> jax.Array:
+    """Per-vehicle token code for (lane, speed, active) channels — the ONE
+    definition of the frame encoding, shared by the single-trajectory and
+    batched-trace serializers so they can never drift apart."""
+    bucket = jnp.clip(
+        (speed / v_max * n_buckets).astype(jnp.int32), 0, n_buckets - 1
+    )
+    lane_code = jnp.where(active, lane, cfg.n_lanes + 1)
+    return SPECIAL + lane_code * n_buckets + bucket
+
+
 def trajectory_to_tokens(
     traj: Trajectory, cfg: SimConfig, n_buckets: int = 16,
     v_max: float = 40.0,
 ) -> jax.Array:
     """Serialize one trajectory into a 1-D token stream (see module doc)."""
     t, k = traj.lane.shape
-    bucket = jnp.clip(
-        (traj.speed / v_max * n_buckets).astype(jnp.int32), 0, n_buckets - 1
-    )
-    lane_code = jnp.where(traj.active, traj.lane, cfg.n_lanes + 1)
-    tok = SPECIAL + lane_code * n_buckets + bucket           # [T, K]
+    tok = _frame_tokens(traj.lane, traj.speed, traj.active, cfg,
+                        n_buckets, v_max)                    # [T, K]
     frames = jnp.concatenate(
         [tok, jnp.full((t, 1), SEP, tok.dtype)], axis=1
     ).reshape(-1)
     return jnp.concatenate(
         [jnp.array([BOS], tok.dtype), frames, jnp.array([EOS], tok.dtype)]
     )
+
+
+def trace_token_streams(
+    lane,
+    speed,
+    active,
+    valid_rows,
+    cfg: SimConfig,
+    n_buckets: int = 16,
+    v_max: float = 40.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched sweep-trace channels → padded token streams.
+
+    The sweep recorder (:mod:`repro.core.record`) produces ``[N, R, K]``
+    (lane, speed, active) slabs whose per-instance filled-row count
+    ``valid_rows[i] = horizon[i] // record_every`` varies (straggler
+    populations). This serializes each instance with the same frame code as
+    :func:`trajectory_to_tokens` — ``[BOS] frames [EOS]`` — fixed-shape to
+    ``L = R*(K+1) + 2`` with trailing ``PAD``. Returns ``([N, L] i32
+    streams, [N] stream lengths incl. BOS/EOS)``. Host-side numpy: this is
+    dataset prep at chunk boundaries, not jit territory.
+    """
+    lane = np.asarray(lane)
+    speed = np.asarray(speed, np.float32)
+    active = np.asarray(active)
+    valid = np.asarray(valid_rows).astype(np.int64)
+    n, r, k = lane.shape
+    tok = np.asarray(
+        _frame_tokens(lane, speed, active, cfg, n_buckets, v_max)
+    ).astype(np.int32)
+    fw = k + 1  # frame width: k vehicle tokens + SEP
+    frames = np.concatenate(
+        [tok, np.full((n, r, 1), SEP, np.int32)], axis=2
+    ).reshape(n, r * fw)
+    mask = np.arange(r * fw)[None, :] < (valid * fw)[:, None]
+    out = np.full((n, r * fw + 2), PAD, np.int32)
+    out[:, 0] = BOS
+    out[:, 1 : 1 + r * fw] = np.where(mask, frames, PAD)
+    out[np.arange(n), 1 + valid * fw] = EOS
+    return out, 2 + valid * fw
 
 
 def sweep_token_dataset(

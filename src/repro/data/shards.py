@@ -1,0 +1,345 @@
+"""Sharded Phase-III dataset: streaming writer + reader.
+
+The paper's Phase III aggregates thousands of per-run outputs into one big
+ML dataset (§2.10). :class:`DatasetWriter` is that aggregation step wired
+into the sweep loop: at every chunk boundary it drains the instances that
+just *finished* — their :class:`~repro.core.record.TraceBuffer` rows,
+terminal metrics and parameter draws — and packs them into size-bounded
+shards on disk:
+
+    root/
+      shard_00000.npz       # columnar arrays (see _write_shard)
+      records_00000.jsonl   # one aliased dict record per instance
+      ...
+      manifest.json         # roster, configs, aliases, shard index,
+                            # fault events, summary
+
+Resume safety: an instance is drained only once ``done``, *after* the fault
+hook has had its chance to revert it, and the writer re-scans existing
+shards on construction — so a killed-and-restarted sweep (checkpoint
+resume) appends exactly the instances not yet persisted. Combined with the
+recorder's absolute-row indexing, the pipeline never drops or duplicates a
+row end to end.
+
+:class:`ShardedDataset` is the consumer side: records, time series and the
+token corpus that :mod:`repro.data.sim_dataset` feeds to LM training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import (
+    _PARAM_COLUMNS,
+    metrics_to_columns,
+    records_from_columns,
+)
+from repro.core.record import valid_rows as _valid_rows
+from repro.core.scenarios import get_scenario
+from repro.core.sweep import SweepConfig, SweepState
+from repro.core.tokens import trace_token_streams, vocab_size
+
+MANIFEST = "manifest.json"
+FORMAT = "webots-hpc-phase3/v1"
+
+
+def _shard_paths(root: str, idx: int) -> tuple[str, str]:
+    return (
+        os.path.join(root, f"shard_{idx:05d}.npz"),
+        os.path.join(root, f"records_{idx:05d}.jsonl"),
+    )
+
+
+class DatasetWriter:
+    """Streams a recording sweep into npz/jsonl shards + a manifest.
+
+    Call :meth:`drain` at chunk boundaries (``run_with_failures`` does this
+    when handed a writer) and :meth:`finalize` once the sweep completes.
+    ``shard_size`` bounds instances per shard; the last shard may be
+    smaller.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        cfg: SweepConfig,
+        shard_size: int = 16,
+        n_buckets: int = 16,
+        v_max: float = 40.0,
+    ) -> None:
+        if cfg.record is None:
+            raise ValueError(
+                "DatasetWriter needs a recording sweep: set "
+                "SweepConfig.record (repro.core.record.RecordConfig)"
+            )
+        if shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+        self.root = root
+        self.cfg = cfg
+        self.shard_size = shard_size
+        self.n_buckets = n_buckets
+        self.v_max = v_max
+        os.makedirs(root, exist_ok=True)
+        # resume: instances already persisted by a previous (killed) run.
+        # The npz is the shard's commit point (_write_shard replaces it
+        # LAST), so scanning shard_*.npz sees only complete shards; stale
+        # temp files from a mid-write kill start with "." and can't match.
+        self._shards: list[dict[str, Any]] = []
+        self._written: set[int] = set()
+        for path in sorted(glob.glob(os.path.join(root, "shard_*.npz"))):
+            stem = os.path.basename(path)[len("shard_"):-len(".npz")]
+            if not stem.isdigit():
+                continue  # not a committed shard of this layout
+            with np.load(path) as z:
+                ids = z["instance"].tolist()
+            self._shards.append(self._shard_entry(int(stem), ids))
+            self._written.update(ids)
+        self._next_shard = (
+            max((s["index"] for s in self._shards), default=-1) + 1
+        )
+        self._pending: dict[int, dict[str, Any]] = {}
+
+    @staticmethod
+    def _shard_entry(idx: int, ids: list[int]) -> dict[str, Any]:
+        npz, jsonl = _shard_paths("", idx)
+        return {
+            "index": idx,
+            "file": os.path.basename(npz),
+            "records": os.path.basename(jsonl),
+            "n_instances": len(ids),
+            "instances": [int(i) for i in ids],
+        }
+
+    @property
+    def written(self) -> set[int]:
+        return set(self._written)
+
+    # ---------------- streaming drain ----------------
+
+    def drain(self, state: SweepState) -> int:
+        """Buffer every newly-finished instance; flush full shards.
+
+        Call after fault handling: a ``done`` bit is only trusted once the
+        chunk's failure injection can no longer revert it. Returns how many
+        instances were newly drained.
+        """
+        done = np.asarray(jax.device_get(state.done))
+        new = [
+            int(i) for i in np.flatnonzero(done)
+            if int(i) not in self._written and int(i) not in self._pending
+        ]
+        if not new:
+            return 0
+        # gather ONLY the newly-done rows on device before pulling to host:
+        # the trace slab is the bulk of the state and most of it belongs to
+        # instances that are still running or already persisted
+        idx = jnp.asarray(new)
+        sub = jax.tree.map(
+            lambda x: x[idx],
+            (state.metrics, state.params, state.horizon,
+             state.scenario_id, state.trace),
+        )
+        metrics, params, horizon, sids, trace = jax.tree.map(
+            np.asarray, jax.device_get(sub)
+        )
+        for j, i in enumerate(new):
+            self._pending[i] = {
+                "metrics": jax.tree.map(lambda x: x[j], metrics),
+                "params": jax.tree.map(lambda x: x[j], params),
+                "horizon": horizon[j],
+                "scenario_id": sids[j],
+                "trace": jax.tree.map(lambda x: x[j], trace),
+            }
+        while len(self._pending) >= self.shard_size:
+            self._flush_one_shard()
+        return len(new)
+
+    def _flush_one_shard(self) -> None:
+        ids = sorted(self._pending)[: self.shard_size]
+        rows = [self._pending.pop(i) for i in ids]
+        self._write_shard(ids, rows)
+
+    def _write_shard(self, ids: list[int], rows: list[dict]) -> None:
+        idx = self._next_shard
+        self._next_shard += 1
+        cfg, rec = self.cfg, self.cfg.record
+        stack = lambda key: jax.tree.map(  # noqa: E731
+            lambda *xs: np.stack(xs), *[r[key] for r in rows]
+        )
+        metrics, params, trace = stack("metrics"), stack("params"), stack("trace")
+        horizon = np.asarray([r["horizon"] for r in rows])
+        sids = np.asarray([r["scenario_id"] for r in rows])
+        valid = np.asarray(_valid_rows(horizon, rec.record_every))
+
+        cols = metrics_to_columns(
+            metrics, params, scenario_ids=sids, scenario_names=cfg.scenarios
+        )
+        records = records_from_columns(cols)
+        arrays: dict[str, np.ndarray] = {
+            "instance": np.asarray(ids, np.int64),
+            "scenario_id": sids.astype(np.int64),
+            "horizon": horizon.astype(np.int64),
+            "valid_rows": valid.astype(np.int64),
+            "series": trace.series,
+        }
+        for k, v in cols.items():
+            if k in ("instance", "scenario_id", "scenario"):
+                continue  # stored above / derivable from the roster
+            prefix = "p" if k in _PARAM_COLUMNS else "m"
+            arrays[f"{prefix}_{k}"] = v
+        if rec.k_slots:
+            arrays.update(lane=trace.lane, speed=trace.speed,
+                          active=trace.active)
+            tokens, lengths = trace_token_streams(
+                trace.lane, trace.speed, trace.active, valid, cfg.sim,
+                n_buckets=self.n_buckets, v_max=self.v_max,
+            )
+            arrays.update(tokens=tokens, stream_len=lengths.astype(np.int64))
+
+        npz_path, jsonl_path = _shard_paths(self.root, idx)
+        # commit order matters for kill/resume: the records jsonl lands
+        # first, the npz replace is the single commit point the resume scan
+        # keys on — a kill in between leaves an orphan jsonl the re-written
+        # shard overwrites, never a committed npz missing its records.
+        # Temp names start with "." so the scan glob can never match them.
+        tmp = os.path.join(self.root, f".tmp_records_{idx:05d}.jsonl")
+        with open(tmp, "w") as f:
+            for logical_id, record in zip(ids, records):
+                record["instance"] = int(logical_id)  # logical, not row
+                f.write(json.dumps(record) + "\n")
+        os.replace(tmp, jsonl_path)
+
+        tmp = os.path.join(self.root, f".tmp_shard_{idx:05d}.npz")
+        np.savez_compressed(tmp, **arrays)
+        os.replace(tmp, npz_path)
+
+        self._shards.append(self._shard_entry(idx, ids))
+        self._written.update(ids)
+
+    # ---------------- finalize ----------------
+
+    def finalize(
+        self,
+        summary: dict | None = None,
+        fault_info: dict | None = None,
+    ) -> str:
+        """Flush the partial tail shard and write the manifest."""
+        while self._pending:
+            self._flush_one_shard()
+        cfg, rec = self.cfg, self.cfg.record
+        manifest = {
+            "format": FORMAT,
+            "sweep": dataclasses.asdict(cfg),
+            "scenarios": list(cfg.scenarios),
+            "record": dataclasses.asdict(rec),
+            "n_buckets": self.n_buckets,
+            "v_max": self.v_max,
+            "vocab_size": vocab_size(cfg.sim, self.n_buckets),
+            "metric_aliases": {
+                name: dict(get_scenario(name).metric_aliases)
+                for name in dict.fromkeys(cfg.scenarios)
+            },
+            "n_instances_written": len(self._written),
+            "shards": sorted(self._shards, key=lambda s: s["index"]),
+            "summary": summary,
+            "fault_events": (fault_info or {}).get("failure_events", []),
+            "fault_info": fault_info,
+        }
+        path = os.path.join(self.root, MANIFEST)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+
+def write_dataset(
+    root: str,
+    state: SweepState,
+    cfg: SweepConfig,
+    shard_size: int = 16,
+    summary: dict | None = None,
+    fault_info: dict | None = None,
+    **writer_kw,
+) -> str:
+    """One-shot: shard out a finished recording sweep's state."""
+    w = DatasetWriter(root, cfg, shard_size=shard_size, **writer_kw)
+    w.drain(state)
+    return w.finalize(summary=summary, fault_info=fault_info)
+
+
+class ShardedDataset:
+    """Reader for a :class:`DatasetWriter` directory."""
+
+    def __init__(self, root: str, manifest: dict) -> None:
+        self.root = root
+        self.manifest = manifest
+
+    @classmethod
+    def load(cls, root: str) -> "ShardedDataset":
+        with open(os.path.join(root, MANIFEST)) as f:
+            return cls(root, json.load(f))
+
+    @property
+    def n_instances(self) -> int:
+        return int(self.manifest["n_instances_written"])
+
+    @property
+    def fields(self) -> list[str]:
+        return list(self.manifest["record"]["fields"])
+
+    def _shard_files(self) -> list[str]:
+        return [
+            os.path.join(self.root, s["file"])
+            for s in self.manifest["shards"]
+        ]
+
+    def iter_shards(self) -> Iterator[dict[str, np.ndarray]]:
+        for path in self._shard_files():
+            with np.load(path, allow_pickle=False) as z:
+                yield dict(z)
+
+    def _concat(self, *keys: str) -> list[np.ndarray]:
+        """One decompression pass per shard, however many keys are read."""
+        parts: dict[str, list[np.ndarray]] = {k: [] for k in keys}
+        for path in self._shard_files():
+            with np.load(path, allow_pickle=False) as z:
+                for k in keys:
+                    parts[k].append(z[k])
+        if not parts[keys[0]]:
+            raise ValueError(f"dataset at {self.root} has no shards")
+        return [np.concatenate(parts[k], axis=0) for k in keys]
+
+    def records(self) -> list[dict[str, Any]]:
+        out: list[dict[str, Any]] = []
+        for s in self.manifest["shards"]:
+            with open(os.path.join(self.root, s["records"])) as f:
+                out.extend(json.loads(line) for line in f if line.strip())
+        return out
+
+    def series(self) -> tuple[list[str], np.ndarray, np.ndarray]:
+        """(field names, [n, R, F] series, [n] valid-row counts)."""
+        series, valid = self._concat("series", "valid_rows")
+        return self.fields, series, valid
+
+    def token_streams(self) -> tuple[np.ndarray, np.ndarray]:
+        """([n, L] padded streams, [n] true lengths)."""
+        streams, lengths = self._concat("tokens", "stream_len")
+        return streams, lengths
+
+    def token_corpus(self) -> np.ndarray:
+        """1-D concatenation of every stream with PAD tails stripped —
+        what the LM batcher (:func:`repro.data.sim_dataset.sim_token_batches`)
+        packs into fixed-shape training windows."""
+        streams, lengths = self.token_streams()
+        return np.concatenate(
+            [s[:n] for s, n in zip(streams, lengths)]
+        )

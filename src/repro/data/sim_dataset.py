@@ -2,8 +2,12 @@
 
 This is the paper's whole point — the aggregated output dataset of thousands
 of randomized simulation runs becomes ML training data. Token streams come
-from ``repro.core.tokens``; this module packs them into fixed-shape
-next-token-prediction batches.
+from the *production sweep path*: either a sharded dataset directory written
+by :class:`repro.data.shards.DatasetWriter` (``shard_dir=...`` — sweep once,
+train many times) or an in-process recording sweep through the same
+``SweepRunner`` engine the launcher uses (dispatch planning, compaction and
+all). Either way the batcher packs one flat token corpus into fixed-shape
+next-token-prediction windows.
 """
 
 from __future__ import annotations
@@ -15,8 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig
-from repro.core.scenario import SimConfig, sample_scenario_params
-from repro.core.tokens import sweep_token_dataset, vocab_size, PAD
+from repro.core.record import RecordConfig
+from repro.core.scenario import SimConfig
+from repro.core.sweep import SweepConfig, SweepRunner
+from repro.core.tokens import trace_token_streams, vocab_size, PAD
 
 
 def sim_token_corpus(
@@ -26,17 +32,51 @@ def sim_token_corpus(
     n_steps: int = 400,
     record_every: int = 10,
     k_slots: int = 8,
+    scenario_mix: tuple[str, ...] = (),
+    dispatch: str = "auto",
 ) -> np.ndarray:
-    """Run a small sweep and concatenate every instance's token stream."""
-    keys = jax.vmap(
-        lambda i: jax.random.fold_in(jax.random.key(seed), i)
-    )(jnp.arange(n_instances))
-    params = jax.vmap(lambda k: sample_scenario_params(k, sim))(keys)
-    streams = sweep_token_dataset(
-        keys, params, sim, n_steps=n_steps, record_every=record_every,
-        k_slots=k_slots,
+    """Run a recording sweep in-process and concatenate every instance's
+    token stream (PAD tails stripped).
+
+    This is the real sweep engine — ``SweepRunner`` with a
+    :class:`~repro.core.record.RecordConfig` — not a side-channel rollout,
+    so the training corpus is bit-identical to what a launched sweep's
+    shards contain for the same config.
+    """
+    cfg = SweepConfig(
+        n_instances=n_instances,
+        steps_per_instance=n_steps,
+        chunk_steps=n_steps,
+        sim=sim,
+        seed=seed,
+        scenario_mix=scenario_mix,
+        dispatch=dispatch,
+        # token channels only: scalar series would be dead weight here
+        record=RecordConfig(record_every=record_every, fields=(),
+                            k_slots=k_slots),
     )
-    return np.asarray(jax.device_get(streams)).reshape(-1)
+    state = SweepRunner(cfg).run()
+    trace = jax.tree.map(
+        lambda x: np.asarray(jax.device_get(x)), state.trace
+    )
+    horizon = np.asarray(jax.device_get(state.horizon))
+    streams, lengths = trace_token_streams(
+        trace.lane, trace.speed, trace.active, horizon // record_every, sim
+    )
+    return np.concatenate([s[:n] for s, n in zip(streams, lengths)])
+
+
+def shard_token_corpus(shard_dir: str) -> tuple[np.ndarray, int]:
+    """(flat token corpus, token vocab size) from a written dataset dir.
+
+    The vocab comes from the manifest — the shards may have been written
+    with a different SimConfig / bucket count than the caller's, and the
+    corpus's true vocabulary is what the model must cover.
+    """
+    from repro.data.shards import ShardedDataset  # deferred: optional path
+
+    ds = ShardedDataset.load(shard_dir)
+    return ds.token_corpus(), int(ds.manifest["vocab_size"])
 
 
 def sim_token_batches(
@@ -47,15 +87,22 @@ def sim_token_batches(
     n_instances: int = 8,
     seed: int = 0,
     start_step: int = 0,
+    shard_dir: str | None = None,
 ) -> Iterator[dict]:
     """Fixed-shape batches over the sim corpus (wrap-around epochs).
 
-    The model's vocab must be ≥ the sim token vocabulary
-    (``repro.core.tokens.vocab_size``).
+    ``shard_dir`` points at a :class:`~repro.data.shards.DatasetWriter`
+    output directory (sweep → shards → train); without it a small recording
+    sweep runs in-process. The model's vocab must be ≥ the sim token
+    vocabulary (``repro.core.tokens.vocab_size``).
     """
-    corpus = sim_token_corpus(sim, n_instances, seed)
-    assert cfg.vocab_size >= vocab_size(sim), (
-        f"model vocab {cfg.vocab_size} < sim vocab {vocab_size(sim)}"
+    if shard_dir is not None:
+        corpus, need_vocab = shard_token_corpus(shard_dir)
+    else:
+        corpus = sim_token_corpus(sim, n_instances, seed)
+        need_vocab = vocab_size(sim)
+    assert cfg.vocab_size >= need_vocab, (
+        f"model vocab {cfg.vocab_size} < sim token vocab {need_vocab}"
     )
     span = batch * (seq + 1)
     n = corpus.shape[0]

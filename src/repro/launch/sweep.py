@@ -20,6 +20,15 @@ instances per scenario into dense switch-free compiled calls each chunk
 (~k× faster on a k-scenario mix); ``switch`` keeps the single-compile
 vmapped ``lax.switch`` program; ``auto`` picks grouped whenever the roster
 is mixed. Both modes are bit-for-bit trajectory-equivalent.
+
+Phase-III dataset output (``--dataset-dir``): turns on trajectory recording
+(``repro.core.record``) and streams every finished instance's time series +
+token stream into npz/jsonl shards with a manifest
+(``repro.data.shards.DatasetWriter``) — the ML-ready replacement for the
+old single monolithic records JSON (``--out`` still writes the summary
+digest):
+
+``python -m repro.launch.sweep --scenario-mix all --dataset-dir /tmp/ds``
 """
 
 from __future__ import annotations
@@ -31,9 +40,11 @@ import time
 from repro.ckpt import CheckpointManager
 from repro.core.aggregate import aggregate_metrics, metrics_to_records
 from repro.core.fault import FailureInjector, run_with_failures
+from repro.core.record import RecordConfig
 from repro.core.scenario import SimConfig
 from repro.core.scenarios import list_scenarios
 from repro.core.sweep import SweepConfig, SweepRunner
+from repro.data.shards import DatasetWriter
 from repro.launch.mesh import make_host_mesh
 
 
@@ -67,7 +78,26 @@ def main() -> None:
                          "failure injection is sized from the actual mesh")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write records JSON here")
+    ap.add_argument("--dataset-dir", default=None,
+                    help="stream a sharded Phase-III dataset here "
+                         "(npz/jsonl shards + manifest); implies recording")
+    ap.add_argument("--record-every", type=int, default=0,
+                    help="trajectory recording stride in steps (0 = off; "
+                         "--dataset-dir defaults it to 10)")
+    ap.add_argument("--record-slots", type=int, default=8,
+                    help="vehicle slots recorded for token streams")
+    ap.add_argument("--shard-size", type=int, default=16,
+                    help="instances per dataset shard")
     args = ap.parse_args()
+
+    record_every = args.record_every
+    if args.dataset_dir and record_every == 0:
+        record_every = 10
+    record = (
+        RecordConfig(record_every=record_every, k_slots=args.record_slots)
+        if record_every > 0
+        else None
+    )
 
     if args.scenario_mix:
         mix = (
@@ -88,6 +118,7 @@ def main() -> None:
         vary_horizon=args.vary_horizon,
         scenario_mix=mix,
         dispatch=args.dispatch,
+        record=record,
     )
     # the mesh is the source of truth for worker count: --workers sizes the
     # mesh, and the injector is sized from whatever mesh actually exists
@@ -101,13 +132,19 @@ def main() -> None:
         seed=args.seed,
     )
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    writer = (
+        DatasetWriter(args.dataset_dir, cfg, shard_size=args.shard_size)
+        if args.dataset_dir
+        else None
+    )
 
     print(f"[sweep] scenarios: {', '.join(cfg.scenarios)} "
           f"({'mixed round-robin' if len(cfg.scenarios) > 1 else 'uniform'}) "
-          f"| dispatch {cfg.effective_dispatch} | {n_workers} worker(s)")
+          f"| dispatch {cfg.effective_dispatch} | {n_workers} worker(s)"
+          + (f" | recording every {record_every} steps" if record else ""))
     t0 = time.perf_counter()
     state, info = run_with_failures(
-        runner, injector, ckpt=ckpt,
+        runner, injector, ckpt=ckpt, writer=writer,
         on_progress=lambda c, done: print(
             f"[sweep] chunk {c}: {done*100:.1f}% complete"
         ),
@@ -122,6 +159,10 @@ def main() -> None:
           f"{info['chunks_run']} chunks, "
           f"{len(info['failure_events'])} failure events")
     print(f"[sweep] {json.dumps(summary, indent=1)}")
+    if writer is not None:
+        manifest = writer.finalize(summary=summary, fault_info=info)
+        print(f"[sweep] wrote sharded dataset: {manifest} "
+              f"({len(writer.written)} instances)")
     if args.out:
         records = metrics_to_records(
             state.metrics, state.params,

@@ -29,6 +29,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--data", choices=["sim", "synthetic"], default="sim")
+    ap.add_argument("--shard-dir", default=None,
+                    help="train on a sharded Phase-III dataset directory "
+                         "(written by repro.launch.sweep --dataset-dir)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none")
@@ -62,7 +65,8 @@ def main() -> None:
     )
     if args.data == "sim":
         data = sim_token_batches(
-            cfg, SimConfig(n_slots=32), batch=args.batch, seq=args.seq
+            cfg, SimConfig(n_slots=32), batch=args.batch, seq=args.seq,
+            shard_dir=args.shard_dir,
         )
     else:
         data = synthetic_batches(cfg, batch=args.batch, seq=args.seq)

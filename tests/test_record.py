@@ -1,0 +1,325 @@
+"""Recording subsystem + sharded Phase-III dataset pipeline tests.
+
+Covers the pieces between the sweep engine and LM training: TraceBuffer
+semantics, trace → token-stream serialization, the streaming DatasetWriter
+(shard layout, manifest, fault-safe drain, kill/resume idempotency) and the
+shard-backed training corpus.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.core import SimConfig
+from repro.core.aggregate import aggregate_metrics
+from repro.core.fault import FailureInjector, run_with_failures
+from repro.core.record import RecordConfig, TraceBuffer, batch_zeros
+from repro.core.sweep import SweepConfig, SweepRunner
+from repro.core.tokens import (
+    BOS,
+    EOS,
+    PAD,
+    Trajectory,
+    trace_token_streams,
+    trajectory_to_tokens,
+    vocab_size,
+)
+from repro.data import sim_token_batches
+from repro.data.shards import DatasetWriter, ShardedDataset, write_dataset
+
+SIM = SimConfig(n_slots=16)
+REC = RecordConfig(record_every=10, k_slots=4)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_instances=6,
+        steps_per_instance=60,
+        chunk_steps=30,
+        sim=SIM,
+        seed=5,
+        scenario_mix=("highway_merge", "lane_drop"),
+        record=REC,
+    )
+    base.update(kw)
+    return SweepConfig(**base)
+
+
+_STATE_CACHE: dict = {}
+
+
+def _run(**kw):
+    key = tuple(sorted(kw.items()))
+    if key not in _STATE_CACHE:
+        _STATE_CACHE[key] = SweepRunner(_cfg(**kw)).run()
+    return _STATE_CACHE[key]
+
+
+# ---------------------------------------------------------------- buffers
+
+def test_trace_buffer_shapes_and_batch_zeros():
+    tb = TraceBuffer.zeros(REC, 60)
+    assert tb.series.shape == (6, len(REC.fields))
+    assert tb.lane.shape == tb.speed.shape == tb.active.shape == (6, 4)
+    stacked = batch_zeros(REC, 60, 3)
+    assert stacked.series.shape == (3, 6, len(REC.fields))
+    assert stacked.lane.dtype == np.int32 and stacked.active.dtype == bool
+
+
+def test_series_counters_are_cumulative_and_consistent():
+    """Counter channels record the cumulative value at the sampled step, so
+    the last row equals the terminal SimMetrics and rows are monotone."""
+    state = _run()
+    tr = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state.trace)
+    fields = list(REC.fields)
+    tp = tr.series[:, :, fields.index("throughput")]
+    lc = tr.series[:, :, fields.index("lane_changes")]
+    assert (np.diff(tp, axis=1) >= 0).all() and (np.diff(lc, axis=1) >= 0).all()
+    m = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state.metrics)
+    # horizon 60 is a multiple of the stride: row -1 is the terminal state
+    np.testing.assert_array_equal(tp[:, -1], m.throughput.astype(np.float32))
+    np.testing.assert_array_equal(lc[:, -1], m.lane_changes.astype(np.float32))
+
+
+# ------------------------------------------------------------ token streams
+
+def test_trace_token_streams_matches_trajectory_to_tokens():
+    """Full-horizon streams reproduce the original serializer bit-for-bit
+    (same frame code), modulo the fixed-shape PAD tail."""
+    state = _run()
+    tr = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state.trace)
+    valid = np.full(tr.lane.shape[0], tr.lane.shape[1])
+    streams, lengths = trace_token_streams(
+        tr.lane, tr.speed, tr.active, valid, SIM
+    )
+    for i in range(tr.lane.shape[0]):
+        ref = np.asarray(trajectory_to_tokens(
+            Trajectory(tr.lane[i], tr.speed[i], tr.active[i]), SIM
+        ))
+        assert lengths[i] == ref.shape[0]
+        np.testing.assert_array_equal(streams[i], ref)
+
+
+def test_trace_token_streams_variable_horizons():
+    lane = np.zeros((3, 5, 2), np.int32)
+    speed = np.full((3, 5, 2), 20.0, np.float32)
+    active = np.ones((3, 5, 2), bool)
+    valid = np.array([5, 2, 0])
+    streams, lengths = trace_token_streams(lane, speed, active, valid, SIM)
+    fw = 3  # 2 vehicle tokens + SEP
+    np.testing.assert_array_equal(lengths, 2 + valid * fw)
+    for s, n in zip(streams, lengths):
+        assert s[0] == BOS and s[n - 1] == EOS
+        assert (s[n:] == PAD).all()
+        assert (s[1:n - 1] >= 4).sum() == (n - 2) * 2 // 3  # vehicle tokens
+    assert (streams[2][1:] == [EOS] + [PAD] * (streams.shape[1] - 2)).all()
+    assert (streams < vocab_size(SIM)).all()
+
+
+# ------------------------------------------------------- writer + reader
+
+def test_dataset_writer_streams_shards_and_manifest(tmp_path):
+    root = str(tmp_path / "ds")
+    cfg = _cfg(vary_horizon=True, min_horizon_frac=0.3)
+    runner = SweepRunner(cfg)
+    writer = DatasetWriter(root, cfg, shard_size=2)
+    state, info = run_with_failures(
+        runner, FailureInjector(n_workers=4, plan={0: [1]}), writer=writer
+    )
+    summary = aggregate_metrics(state.metrics, state.scenario_id,
+                                cfg.scenarios)
+    manifest_path = writer.finalize(summary=summary, fault_info=info)
+    assert os.path.exists(manifest_path)
+
+    ds = ShardedDataset.load(root)
+    assert ds.n_instances == cfg.n_instances
+    man = ds.manifest
+    assert man["format"].startswith("webots-hpc-phase3")
+    assert man["scenarios"] == list(cfg.scenarios)
+    assert man["record"]["record_every"] == REC.record_every
+    assert man["metric_aliases"]["lane_drop"]  # aliases shipped for readers
+    assert man["fault_events"] == info["failure_events"]
+    assert sum(s["n_instances"] for s in man["shards"]) == cfg.n_instances
+
+    # each logical instance lands in exactly one shard
+    all_ids = [i for s in man["shards"] for i in s["instances"]]
+    assert sorted(all_ids) == list(range(cfg.n_instances))
+
+    recs = ds.records()
+    assert sorted(r["instance"] for r in recs) == list(range(cfg.n_instances))
+    by_id = {r["instance"]: r for r in recs}
+    assert "forced_merges" in by_id[1]  # lane_drop aliases in jsonl records
+
+    fields, series, valid = ds.series()
+    assert fields == list(REC.fields)
+    assert series.shape[0] == cfg.n_instances
+    h = np.asarray(jax.device_get(state.horizon))
+    np.testing.assert_array_equal(
+        np.sort(valid), np.sort(h // REC.record_every)
+    )
+    streams, lengths = ds.token_streams()
+    assert (streams[:, 0] == BOS).all()
+    corpus = ds.token_corpus()
+    assert corpus.shape[0] == lengths.sum() and (corpus != PAD).all()
+
+
+def test_dataset_matches_in_memory_state(tmp_path):
+    """Shards are a faithful serialization: series/tokens re-loaded from
+    disk equal the in-memory trace for every logical instance."""
+    root = str(tmp_path / "ds")
+    cfg = _cfg()
+    state = SweepRunner(cfg).run()
+    write_dataset(root, state, cfg, shard_size=4)
+    ds = ShardedDataset.load(root)
+    tr = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state.trace)
+    order = np.argsort(np.concatenate(
+        [s["instances"] for s in ds.manifest["shards"]]
+    ))
+    _, series, _ = ds.series()
+    np.testing.assert_array_equal(series[order], tr.series)
+
+
+def test_dataset_writer_kill_resume_never_drops_or_duplicates(tmp_path):
+    """Writer torn down mid-sweep ("job killed"), a fresh writer resumes on
+    the same directory: every instance appears exactly once and the shard
+    payloads equal an uninterrupted run's."""
+    root = str(tmp_path / "ds")
+    cfg = _cfg(vary_horizon=True, min_horizon_frac=0.3)
+
+    # partial run: two chunks' worth of drains, then the process "dies"
+    runner = SweepRunner(cfg)
+    w1 = DatasetWriter(root, cfg, shard_size=2)
+    state = runner.init()
+    for _ in range(2):
+        state = runner.run_chunk(state)
+        w1.drain(state)
+    persisted_early = set(w1.written)  # full shards already on disk
+    del w1  # buffered-but-unflushed instances are lost with the process
+
+    # resume: a fresh writer re-scans the directory, the sweep re-runs
+    w2 = DatasetWriter(root, cfg, shard_size=2)
+    assert w2.written == persisted_early
+    final, info = run_with_failures(
+        SweepRunner(cfg), FailureInjector(n_workers=4, plan={}),
+        state=runner.init(), writer=w2,
+    )
+    assert info["completion_rate"] == 1.0
+    w2.finalize()
+
+    ds = ShardedDataset.load(root)
+    all_ids = [i for s in ds.manifest["shards"] for i in s["instances"]]
+    assert sorted(all_ids) == list(range(cfg.n_instances))  # no drop/dup
+
+    # payload parity with a one-shot uninterrupted write
+    clean_root = str(tmp_path / "clean")
+    write_dataset(clean_root, SweepRunner(cfg).run(), cfg, shard_size=2)
+    clean = ShardedDataset.load(clean_root)
+
+    def by_instance(d):
+        out = {}
+        for z in d.iter_shards():
+            for j, i in enumerate(z["instance"]):
+                out[int(i)] = {k: v[j] for k, v in z.items()}
+        return out
+
+    a, b = by_instance(ds), by_instance(clean)
+    assert a.keys() == b.keys()
+    for i in a:
+        for k in a[i]:
+            np.testing.assert_array_equal(a[i][k], b[i][k], err_msg=f"{i}/{k}")
+
+
+def test_writer_requires_recording_config(tmp_path):
+    with pytest.raises(ValueError):
+        DatasetWriter(str(tmp_path), _cfg(record=None))
+    with pytest.raises(ValueError):
+        DatasetWriter(str(tmp_path), _cfg(), shard_size=0)
+
+
+# ------------------------------------------------------- training bridge
+
+def test_sim_token_batches_from_shards(tmp_path):
+    """sweep → shards → sim_token_batches: the LM trains on genuine sweep
+    output, and the shard-backed corpus equals the shard token corpus."""
+    root = str(tmp_path / "ds")
+    cfg = _cfg()
+    state = SweepRunner(cfg).run()
+    write_dataset(root, state, cfg, shard_size=3)
+
+    model_cfg = get_arch("qwen1.5-0.5b").reduced(vocab_size=256)
+    it = sim_token_batches(model_cfg, SIM, batch=2, seq=16, shard_dir=root)
+    b = next(it)
+    assert b["tokens"].shape == (2, 16)
+    corpus = ShardedDataset.load(root).token_corpus()
+    span = 2 * 17
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"]).reshape(-1),
+        corpus[:span].reshape(2, 17)[:, :-1].reshape(-1),
+    )
+
+
+def test_writer_drains_on_resume_of_finished_sweep(tmp_path):
+    """Resuming a checkpoint whose sweep is already 100% done (or killed
+    between the final ckpt.save and its drain) must still write every
+    instance: run_with_failures drains once more after the loop breaks."""
+    from repro.ckpt import CheckpointManager
+
+    root = str(tmp_path / "ds")
+    cfg = _cfg()
+    ckpt = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+
+    # finish the whole sweep WITH checkpoints but NO writer (the lost drain)
+    _, info = run_with_failures(SweepRunner(cfg),
+                                FailureInjector(n_workers=4, plan={}),
+                                ckpt=ckpt)
+    assert info["completion_rate"] == 1.0
+
+    # resume the finished checkpoint with a writer: zero chunks run, yet
+    # the dataset must still cover every instance
+    w = DatasetWriter(root, cfg, shard_size=4)
+    _, info2 = run_with_failures(SweepRunner(cfg),
+                                 FailureInjector(n_workers=4, plan={}),
+                                 ckpt=ckpt, writer=w)
+    assert info2["chunks_run"] == 0
+    w.finalize()
+    ds = ShardedDataset.load(root)
+    assert ds.n_instances == cfg.n_instances
+
+
+def test_shard_backed_batches_validate_manifest_vocab(tmp_path):
+    """The model-vocab check uses the manifest's stored vocab, not the
+    caller's SimConfig: shards written with more buckets than the default
+    must be rejected when the model vocab only covers the default."""
+    root = str(tmp_path / "ds")
+    cfg = _cfg()
+    state = SweepRunner(cfg).run()
+    write_dataset(root, state, cfg, shard_size=4, n_buckets=64)
+    need = ShardedDataset.load(root).manifest["vocab_size"]
+    model_cfg = get_arch("qwen1.5-0.5b").reduced(vocab_size=need - 1)
+    with pytest.raises(AssertionError):
+        next(sim_token_batches(model_cfg, SIM, batch=1, seq=8,
+                               shard_dir=root))
+
+
+def test_writer_resume_ignores_torn_temp_files(tmp_path):
+    """A kill mid-shard-write leaves temp files; writer construction must
+    skip them (and any non-numeric shard-lookalike) instead of crashing,
+    and the resumed run must still produce a complete dataset."""
+    root = str(tmp_path / "ds")
+    os.makedirs(root)
+    for junk in (".tmp_shard_00000.npz", "shard_00001.npz.tmp.npz"):
+        with open(os.path.join(root, junk), "wb") as f:
+            f.write(b"torn write")
+    with open(os.path.join(root, ".tmp_records_00000.jsonl"), "w") as f:
+        f.write("{\"torn\":")
+    cfg = _cfg()
+    w = DatasetWriter(root, cfg, shard_size=4)
+    assert w.written == set()
+    w.drain(_run())
+    w.finalize()
+    ds = ShardedDataset.load(root)
+    assert ds.n_instances == cfg.n_instances
+    assert sorted(r["instance"] for r in ds.records()) == list(range(6))

@@ -1,11 +1,14 @@
-"""Sweep engine tests: completion, chunking invariance, compaction, tokens."""
+"""Sweep engine tests: completion, chunking invariance, compaction, tokens,
+trajectory recording, and plan_chunk/GroupPlan property-based invariants."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypcompat import given, settings, st
 
 from repro.core import SimConfig
+from repro.core.record import RecordConfig
 from repro.core.sweep import (
     SweepConfig,
     SweepRunner,
@@ -262,3 +265,196 @@ def test_sweep_token_dataset_shapes():
     assert ds.shape[1] == 4 * 5 + 2  # 4 frames x (4+1) + BOS/EOS
     # instances deviate (the paper's randomization premise)
     assert not np.array_equal(np.asarray(ds[0]), np.asarray(ds[1]))
+
+
+# --------------------------------------------------------------------------
+# trajectory recording (repro.core.record): dispatch parity by construction
+# --------------------------------------------------------------------------
+
+REC = RecordConfig(record_every=10, k_slots=4)
+MIX2 = ("highway_merge", "lane_drop")
+_REC_KW = dict(n_instances=6, steps_per_instance=60, chunk_steps=30,
+               scenario_mix=MIX2, record=REC, vary_horizon=True,
+               min_horizon_frac=0.3)
+_REC_REF: dict = {}  # dispatch-parity reference state, computed once
+
+
+def _rec_ref():
+    if "state" not in _REC_REF:
+        _REC_REF["state"] = SweepRunner(
+            _cfg(dispatch="switch", compaction=True, **_REC_KW)
+        ).run()
+    return _REC_REF["state"]
+
+
+def test_recording_chunk_size_invariance():
+    """Rows are indexed by absolute step count, so chunk boundaries cannot
+    change a single recorded bit (the slice counter itself legitimately
+    differs, so it is normalized out of the comparison). chunk 24 is not a
+    stride multiple, so this also pins windowed-vs-per-step recording
+    parity (the two code paths inside rollout_chunk_rec)."""
+    ref = _rec_ref()
+    for chunk in (60, 20, 24):
+        got = SweepRunner(
+            _cfg(dispatch="switch", compaction=True,
+                 **{**_REC_KW, "chunk_steps": chunk})
+        ).run()
+        _assert_states_equal(ref, got._replace(chunk=ref.chunk))
+
+
+@pytest.mark.parametrize("dispatch,compaction", [
+    ("grouped", True), ("grouped", False), ("switch", False), ("auto", True),
+])
+def test_recording_dispatch_parity_bitwise(dispatch, compaction):
+    """Recorded time series are bit-identical across every dispatch mode ×
+    compaction setting: the trace rides SweepState through the planner's
+    logical-slot scatter, so physical repacking can never leak into it."""
+    got = SweepRunner(
+        _cfg(dispatch=dispatch, compaction=compaction, **_REC_KW)
+    ).run()
+    assert completion_rate(got) == 1.0
+    _assert_states_equal(_rec_ref(), got)
+
+
+def test_recording_matches_record_rollout_oracle():
+    """The sweep recorder reproduces tokens.record_rollout's trajectory
+    bit-for-bit when pointed at the same instance PRNG path — the recorder
+    changes WHERE rows are stored, never what is simulated."""
+    from repro.core.scenarios import get_scenario
+
+    cfg = _cfg(record=REC, steps_per_instance=60, chunk_steps=30,
+               n_instances=2)
+    state = SweepRunner(cfg).run()
+    base = jax.random.key(cfg.seed)
+    for i in range(2):
+        k = jax.random.fold_in(base, i)
+        sp = get_scenario(SIM.scenario).sample_params(
+            jax.random.fold_in(k, 1), SIM
+        )
+        _, traj = record_rollout(
+            jax.random.fold_in(k, 2), sp, SIM,
+            n_steps=cfg.steps_per_instance,
+            record_every=REC.record_every, k_slots=REC.k_slots,
+        )
+        tr = jax.tree.map(lambda x: np.asarray(x[i]), state.trace)
+        np.testing.assert_array_equal(np.asarray(traj.lane), tr.lane)
+        np.testing.assert_array_equal(np.asarray(traj.speed), tr.speed)
+        np.testing.assert_array_equal(np.asarray(traj.active), tr.active)
+
+
+def test_recording_rows_beyond_horizon_stay_zero():
+    """Variable-cost instances fill exactly horizon // record_every rows."""
+    state = _rec_ref()
+    tr = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state.trace)
+    h = np.asarray(jax.device_get(state.horizon))
+    assert (h < _REC_KW["steps_per_instance"]).any()  # real stragglers
+    for i, hi in enumerate(h):
+        v = hi // REC.record_every
+        assert tr.active[i, v:].sum() == 0
+        assert (tr.series[i, v:] == 0).all()
+        # filled rows carry real data: the active-count channel is populated
+        assert (tr.series[i, :v, 1] > 0).any()
+
+
+def test_record_config_validation():
+    with pytest.raises(ValueError):
+        RecordConfig(record_every=0)
+    with pytest.raises(ValueError):
+        RecordConfig(fields=("no_such_channel",))
+    with pytest.raises(ValueError):
+        RecordConfig(fields=(), k_slots=0)
+    with pytest.raises(ValueError):
+        RecordConfig(k_slots=-1)
+    assert RecordConfig().n_rows(120) == 12
+    assert RecordConfig(record_every=7).n_rows(120) == 17
+
+
+# --------------------------------------------------------------------------
+# plan_chunk / GroupPlan property-based invariants (hypothesis)
+# --------------------------------------------------------------------------
+
+
+def _check_plan_invariants(done, sids, n_workers, grouped, compaction,
+                           n_scenarios):
+    plans = plan_chunk(done, sids, n_workers, grouped=grouped,
+                       compaction=compaction)
+    n = done.size
+    pending = np.flatnonzero(~done)
+    expected = pending if compaction else np.arange(n)
+    if compaction and pending.size == 0:
+        assert plans == []
+        return plans
+    # every scheduled-for-keep instance appears EXACTLY once across groups
+    kept = np.concatenate([p.take[: p.keep] for p in plans])
+    assert sorted(kept.tolist()) == sorted(expected.tolist())
+    done_pool = np.flatnonzero(done)
+    for p in plans:
+        # dense groups: padded to a worker multiple
+        assert p.take.size % n_workers == 0 and p.take.size > 0
+        pad = p.take[p.keep:]
+        if done_pool.size:
+            # padding rows come only from already-done instances
+            assert done[pad].all()
+        else:
+            # fallback: repeat a live row of the same group
+            assert set(pad.tolist()) <= set(p.take[: p.keep].tolist())
+        if grouped:
+            assert 0 <= p.roster < n_scenarios
+            assert (sids[p.take[: p.keep]] == p.roster).all()
+        else:
+            assert p.roster == -1
+        assert p.identity == (
+            p.take.size == n and p.keep == n
+            and np.array_equal(p.take, np.arange(n))
+        )
+    return plans
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    n_workers=st.integers(1, 9),
+    n_scenarios=st.integers(1, 5),
+    grouped=st.booleans(),
+    compaction=st.booleans(),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_property_plan_chunk_invariants(n, n_workers, n_scenarios, grouped,
+                                        compaction, seed):
+    """Every pending instance is scheduled exactly once; padding rows are
+    drawn only from done instances (or group-live fallback); groups are
+    dense worker multiples partitioned by scenario."""
+    rng = np.random.default_rng(seed)
+    done = rng.random(n) < rng.uniform(0.0, 1.0)
+    sids = rng.integers(0, n_scenarios, size=n)
+    _check_plan_invariants(done, sids, n_workers, grouped, compaction,
+                           n_scenarios)
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    n_workers=st.integers(1, 9),
+    n_scenarios=st.integers(1, 5),
+    grouped=st.booleans(),
+    compaction=st.booleans(),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_property_scatter_roundtrip_identity(n, n_workers, n_scenarios,
+                                             grouped, compaction, seed):
+    """The gather → per-group transform → scatter pipeline applies the
+    transform to every live slot exactly once and is the identity on every
+    other slot (what makes recording dispatch-agnostic)."""
+    rng = np.random.default_rng(seed)
+    done = rng.random(n) < rng.uniform(0.0, 1.0)
+    sids = rng.integers(0, n_scenarios, size=n)
+    plans = plan_chunk(done, sids, n_workers, grouped=grouped,
+                       compaction=compaction)
+    base = rng.normal(size=n)
+    out = base.copy()
+    for p in plans:
+        part = out[p.take] + 1.0       # the "chunk step" on physical rows
+        out[p.take[: p.keep]] = part[: p.keep]  # padding rows dropped
+    live = ~done if compaction else np.ones(n, bool)
+    np.testing.assert_allclose(out[live], base[live] + 1.0)
+    np.testing.assert_array_equal(out[~live], base[~live])
