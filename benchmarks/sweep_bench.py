@@ -18,6 +18,16 @@ quantities:
   (``RecordConfig(record_every=10, k_slots=8)``) — the Phase-III dataset
   channel must stay cheap (< 15 % step-rate cost; CI's bench gate warns
   past that and fails past 30 %).
+- sharded: the device-sharded executor. Two measurements: per-chunk step
+  rate at 1 device vs every device the backend exposes (instance-axis
+  scaling — on forced-host CPU "devices" share the same cores, so this is
+  a code-path check there and a real speedup on real hardware), and the
+  wall time of a full recording sweep streaming shards to disk under the
+  synchronous vs the **pipelined** loop (``run_with_failures
+  pipeline=True``: chunk c+1 dispatched before chunk c's checkpoint/shard
+  I/O). ``overlap_gain`` = sync/pipelined wall — the gate fails below
+  0.9× (pipelining must never cost throughput) and the acceptance target
+  is ≥ 1.0 at 4 simulated devices.
 
     PYTHONPATH=src python -m benchmarks.run --only sweep
 
@@ -176,6 +186,108 @@ def _bench_recording() -> dict:
     return entry
 
 
+def _bench_sharded() -> dict:
+    """Scaling + overlap of the device-sharded, pipelined executor.
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (CI
+    does) or on a real multi-device host; with a single visible device the
+    suite records only the 1-device numbers and no overlap comparison is
+    possible, so it is marked ``skipped``.
+    """
+    import shutil
+    import tempfile
+    import time
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.fault import FailureInjector, run_with_failures
+    from repro.data.shards import DatasetWriter
+
+    n_devices = jax.device_count()
+    entry: dict = {"n_devices": n_devices, "n_instances": MIX_INSTANCES,
+                   "chunk_steps": MIX_CHUNK_STEPS}
+    if n_devices < 2:
+        entry["skipped"] = "needs >= 2 devices (force with XLA_FLAGS)"
+        emit("sweep_sharded", 0.0, "skipped_single_device")
+        return entry
+
+    base = dict(
+        n_instances=MIX_INSTANCES,
+        steps_per_instance=MIX_CHUNK_STEPS,
+        chunk_steps=MIX_CHUNK_STEPS,
+        sim=SimConfig(n_slots=N_SLOTS, neighbor_impl="sort"),
+        scenario_mix=MIXES["mix2"],
+        compaction=False,
+        dispatch="grouped",
+    )
+    # instance-axis scaling: per-chunk step rate, 1 device vs all
+    scaling = {}
+    for label, mesh in (
+        ("1", None),
+        (str(n_devices), Mesh(np.asarray(jax.devices()), ("workers",))),
+    ):
+        runner = SweepRunner(SweepConfig(**base), mesh=mesh)
+        state = runner.init()
+        t = timeit(runner.run_chunk, state, iters=5)
+        rate = MIX_CHUNK_STEPS * MIX_INSTANCES / t
+        scaling[label] = {
+            "seconds_per_chunk": t,
+            "steps_per_sec": rate,
+            "veh_steps_per_sec": rate * N_SLOTS,
+        }
+        emit(f"sweep_sharded_{label}dev", t * 1e6, f"{rate:.0f}_steps_per_s")
+    entry["scaling"] = scaling
+    entry["scaling_speedup"] = (
+        scaling[str(n_devices)]["steps_per_sec"] / scaling["1"]["steps_per_sec"]
+    )
+
+    # compute/I-O overlap: full recording sweep streaming shards to disk,
+    # synchronous vs pipelined loop (multiple chunks so the deferred-I/O
+    # double buffer actually alternates)
+    n_chunks = 4
+    rec_cfg = SweepConfig(**{
+        **base,
+        "steps_per_instance": MIX_CHUNK_STEPS * n_chunks,
+        "record": RecordConfig(record_every=10, k_slots=8),
+        "vary_horizon": True,
+        "min_horizon_frac": 0.4,
+        "compaction": True,
+    })
+    mesh = Mesh(np.asarray(jax.devices()), ("workers",))
+    runner = SweepRunner(rec_cfg, mesh=mesh)
+    injector = FailureInjector(n_workers=n_devices, plan={})
+
+    def one_run(pipeline: bool) -> float:
+        root = tempfile.mkdtemp(prefix="sweep_sharded_bench_")
+        try:
+            writer = DatasetWriter(root, rec_cfg, shard_size=4)
+            t0 = time.perf_counter()
+            state, _ = run_with_failures(runner, injector, writer=writer,
+                                         pipeline=pipeline)
+            jax.block_until_ready(state.sim.t)
+            writer.finalize()
+            return time.perf_counter() - t0
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    one_run(False)  # warm the compile caches out of the measurement
+    overlap = {}
+    for label, pipeline in (("synchronous", False), ("pipelined", True)):
+        best = min(one_run(pipeline) for _ in range(3))
+        rate = MIX_CHUNK_STEPS * n_chunks * MIX_INSTANCES / best
+        overlap[label] = {"seconds_per_sweep": best, "steps_per_sec": rate}
+        emit(f"sweep_sharded_{label}", best * 1e6, f"{rate:.0f}_steps_per_s")
+    entry["overlap"] = overlap
+    entry["overlap_gain"] = (
+        overlap["synchronous"]["seconds_per_sweep"]
+        / overlap["pipelined"]["seconds_per_sweep"]
+    )
+    emit("sweep_sharded_overlap", 0.0,
+         f"{entry['overlap_gain']:.2f}x_pipelined_over_sync")
+    return entry
+
+
 def run() -> None:
     impls = ["reference", "dense", "sort"]
     if jax.default_backend() == "tpu":
@@ -184,6 +296,7 @@ def run() -> None:
     results = _bench_scenarios(impls)
     mixed = _bench_mixed()
     recording = _bench_recording()
+    sharded = _bench_sharded()
 
     payload = {
         "bench": "sweep",
@@ -196,6 +309,7 @@ def run() -> None:
         "results": results,
         "mixed": mixed,
         "recording": recording,
+        "sharded": sharded,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=1)

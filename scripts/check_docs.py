@@ -1,0 +1,133 @@
+"""Docs can't rot: execute every fenced ``bash`` block, verify every link.
+
+CI's ``docs`` job runs this over README.md and docs/ARCHITECTURE.md (see
+.github/workflows/ci.yml) in a quick-mode environment (CPU backend, 4
+forced host devices, ``PYTHONPATH=src``):
+
+    python scripts/check_docs.py README.md docs/ARCHITECTURE.md
+
+Rules:
+
+- every fenced code block whose info string is exactly ``bash`` is run
+  with ``bash -euo pipefail`` from the repo root; non-zero exit fails the
+  check. Blocks are independent shells — the runner exports
+  ``PYTHONPATH=src`` for all of them, so docs may omit the boilerplate.
+- a block immediately preceded by an HTML comment containing
+  ``check-docs: skip`` is listed but not executed (for commands whose
+  cost is the point — the paper-scale sweep, the full benchmark run).
+- every relative markdown link ``[text](path)`` must resolve to an
+  existing file (anchors and absolute URLs are ignored) — broken
+  intra-repo links fail the check.
+
+Exit code: 1 if anything failed, 0 when the docs are green (a raw failure
+count would wrap modulo 256 and could exit 0 on a badly broken tree).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_MARK = "check-docs: skip"
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+?)(?:\s+\"[^\"]*\")?\)")
+TIMEOUT = int(os.environ.get("CHECK_DOCS_TIMEOUT", "900"))
+
+
+def extract_blocks(path: str) -> list[tuple[int, bool, str]]:
+    """(start line, skipped?, script) for every ``bash`` fence in ``path``."""
+    lines = open(path).readlines()
+    blocks: list[tuple[int, bool, str]] = []
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped.startswith("```"):
+            info = stripped[3:].strip()
+            fence_start = i
+            body: list[str] = []
+            i += 1
+            while i < len(lines) and not lines[i].strip().startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if info == "bash":
+                skipped = any(
+                    SKIP_MARK in lines[j]
+                    for j in range(max(0, fence_start - 2), fence_start)
+                )
+                blocks.append((fence_start + 1, skipped, "".join(body)))
+        i += 1
+    return blocks
+
+
+def check_links(path: str) -> list[str]:
+    errors = []
+    text = open(path).read()
+    # fenced code is not prose: links inside code blocks aren't links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (
+            os.path.join(REPO_ROOT, rel.lstrip("/"))
+            if rel.startswith("/")
+            else os.path.join(base, rel)
+        )
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def run_block(path: str, line: int, script: str) -> bool:
+    print(f"\n=== {path}:{line} ===\n{script.rstrip()}\n---")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    try:
+        proc = subprocess.run(
+            ["bash", "-euo", "pipefail", "-c", script],
+            cwd=REPO_ROOT, env=env, timeout=TIMEOUT,
+        )
+    except subprocess.TimeoutExpired:
+        print(f"FAIL (timeout after {TIMEOUT}s)")
+        return False
+    if proc.returncode != 0:
+        print(f"FAIL (exit {proc.returncode})")
+        return False
+    print("ok")
+    return True
+
+
+def main(argv: list[str]) -> int:
+    files = argv or ["README.md", "docs/ARCHITECTURE.md"]
+    failures = 0
+    n_run = n_skip = 0
+    for f in files:
+        path = os.path.join(REPO_ROOT, f)
+        if not os.path.exists(path):
+            print(f"{f}: missing file")
+            failures += 1
+            continue
+        for err in check_links(path):
+            print(err)
+            failures += 1
+        for line, skipped, script in extract_blocks(path):
+            if skipped:
+                print(f"skip {f}:{line} (marked {SKIP_MARK!r})")
+                n_skip += 1
+                continue
+            n_run += 1
+            if not run_block(f, line, script):
+                failures += 1
+    print(f"\ncheck_docs: {n_run} blocks run, {n_skip} skipped, "
+          f"{failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

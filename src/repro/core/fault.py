@@ -10,10 +10,12 @@ Failure masks and reverts operate on LOGICAL instance ids. The sweep's chunk
 execution planner (compaction + scenario grouping, ``repro.core.sweep``)
 repacks instances onto physical rows inside ``run_chunk``, but every
 ``SweepState`` it returns is back in logical order — so this module is
-dispatch-agnostic by construction: the same failure plan kills the same
-instances under ``switch`` and ``grouped`` dispatch, with or without
-compaction, and trajectories stay bit-for-bit identical across modes
-(tested in tests/test_fault.py).
+dispatch- AND sharding-agnostic by construction: the same failure plan
+kills the same instances under ``switch`` and ``grouped`` dispatch, with
+or without compaction, on one device or on an N-device mesh (the
+device-blocked executor's LPT packing is just another physical-row
+permutation the masks never see), and trajectories stay bit-for-bit
+identical across all of it (tests/test_fault.py, tests/test_sharded.py).
 """
 
 from __future__ import annotations
@@ -50,8 +52,10 @@ class FailureInjector:
 
         The worker→instance map is the static ceil-block assignment, NOT the
         planner's per-chunk physical packing — deliberately, so the failure
-        model (and therefore the trajectory) is independent of dispatch mode
-        and compaction."""
+        model (and therefore the trajectory) is independent of dispatch
+        mode, compaction, AND device sharding: ``n_workers`` is the logical
+        ``devices × workers_per_device`` grid, not whatever LPT block an
+        instance happened to land on this chunk."""
         mask = np.zeros((n_instances,), bool)
         per = -(-n_instances // self.n_workers)  # ceil block size
         for w in self.failed_workers(chunk):
@@ -96,6 +100,7 @@ def run_with_failures(
     max_chunks: int = 10_000,
     on_progress: Callable[[int, float], None] | None = None,
     writer=None,
+    pipeline: bool = False,
 ) -> tuple[SweepState, dict]:
     """Full fault-tolerant run loop.
 
@@ -107,6 +112,21 @@ def run_with_failures(
     longer be reverted once an instance is handed to the writer. Returns
     the final state plus bookkeeping (chunks run, failure events,
     completion rate — the paper's §5.2 numbers).
+
+    ``pipeline=True`` double-buffers the host I/O against device compute:
+    chunk dispatch is asynchronous (``run_chunk`` returns futures), so the
+    loop dispatches chunk ``c`` first and only then performs chunk
+    ``c-1``'s deferred checkpoint write and shard drain — npz compression,
+    jsonl/manifest writes and the checkpoint's host copy all overlap the
+    devices' chunk-``c`` compute. The drain's device-side gather is
+    enqueued *before* chunk ``c`` is dispatched
+    (:meth:`~repro.data.shards.DatasetWriter.begin_drain`), so it never
+    queues behind a whole chunk on the device stream. The only
+    synchronization point per chunk is the completion bitmap the planner
+    needs anyway. Both modes produce bit-for-bit identical states, shards
+    and checkpoints — pipelining reorders *when* files are written, never
+    what is written (tests/test_sharded.py); a mid-run kill can at worst
+    lose one chunk's checkpoint lag, which resume already tolerates.
     """
     if state is None:
         state = runner.init()
@@ -115,6 +135,18 @@ def run_with_failures(
         state = runner._place(state)
     events = []
     chunks_run = 0
+    # deferred host I/O from the previous chunk: (chunk id, state, gather)
+    deferred: tuple[int, SweepState, object] | None = None
+
+    def flush(d) -> None:
+        if d is None:
+            return
+        step, st, handle = d
+        if ckpt is not None:
+            ckpt.save(step, st)
+        if writer is not None:
+            writer.finish_drain(handle)
+
     for c in range(max_chunks):
         if bool(jax.device_get(jnp.all(state.done))):
             break
@@ -129,13 +161,26 @@ def run_with_failures(
             state = state._replace(done=state.sim.t >= state.horizon)
             events.append({"chunk": c, "workers": dead,
                            "instances": int(mask.sum())})
-        if ckpt is not None:
-            ckpt.save(int(jax.device_get(state.chunk)), state)
-        if writer is not None:
-            writer.drain(state)
+        if pipeline:
+            # chunk c is in flight on the devices; do chunk c-1's file I/O
+            # now, while they compute
+            flush(deferred)
+            done_np = np.asarray(jax.device_get(state.done))  # sync point
+            handle = (
+                writer.begin_drain(state, done=done_np)
+                if writer is not None
+                else None
+            )
+            deferred = (int(jax.device_get(state.chunk)), state, handle)
+        else:
+            if ckpt is not None:
+                ckpt.save(int(jax.device_get(state.chunk)), state)
+            if writer is not None:
+                writer.drain(state)
         if on_progress is not None:
             done = float(jax.device_get(jnp.mean(state.done.astype(jnp.float32))))
             on_progress(c, done)
+    flush(deferred)
     if writer is not None:
         # the loop breaks BEFORE running a chunk when everything is already
         # done — e.g. resuming a finished sweep's checkpoint, or a kill that

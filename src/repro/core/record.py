@@ -21,7 +21,10 @@ recording channel to the sweep engine:
     a row, by construction,
   * the buffer rides :class:`~repro.core.sweep.SweepState` in LOGICAL
     instance order through the chunk planner's gather/scatter, so it is
-    dispatch-agnostic across ``switch``/``grouped``/compaction for free.
+    dispatch-agnostic across ``switch``/``grouped``/compaction — and
+    sharding-agnostic across device counts (the N-device executor's LPT
+    block packing is just another physical-row permutation; rows come
+    back to logical slots before anything reads them) — for free.
 
 The sweep loop drains completed instances' rows to host at chunk
 boundaries (:class:`repro.data.shards.DatasetWriter`), turning every sweep

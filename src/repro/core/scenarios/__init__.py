@@ -61,6 +61,11 @@ def register_scenario(cls: type[Scenario]) -> type[Scenario]:
 
 
 def get_scenario(name: str) -> Scenario:
+    """Look up a registered :class:`Scenario` singleton by registry name.
+
+    Raises ``KeyError`` (listing the registered names) for unknown names —
+    the error surface for every ``SimConfig.scenario`` typo.
+    """
     try:
         return _REGISTRY[name]
     except KeyError:

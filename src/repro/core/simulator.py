@@ -122,7 +122,14 @@ class SimMetrics(NamedTuple):
 
 
 def init_state(cfg: SimConfig, key: jax.Array) -> SimState:
-    """Empty world: all slots inactive."""
+    """Empty world: every one of the ``cfg.n_slots`` vehicle slots inactive.
+
+    Positions park at ``-INF`` meters (off-road sentinel), speeds at 0 m/s,
+    driver parameters at their population means; ``key`` seeds the
+    instance's in-sim PRNG stream (spawns, driver draws). The step counter
+    ``t`` starts at 0 — horizons and trace-row indices are absolute step
+    counts from here.
+    """
     n = cfg.n_slots
     zf = jnp.zeros((n,), jnp.float32)
     return SimState(

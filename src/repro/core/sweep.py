@@ -37,6 +37,28 @@ mapped onto compiled programs:
 
 Both modes are bit-for-bit trajectory-equivalent (tested); ``grouped``
 recovers the k× redundancy on mixed sweeps (see BENCH_sweep.json ``mixed``).
+
+Device sharding (the paper's "across an arbitrary number of computing
+nodes"): given a :class:`jax.sharding.Mesh` with **D > 1** devices, the
+runner stops issuing one global (or per-scenario) call and instead plans
+**per-device blocks**: :func:`plan_chunk_blocks` packs the per-scenario
+groups onto devices with LPT (longest-processing-time-first, the same
+heuristic the paper uses to pack simulation jobs onto nodes), splitting a
+group across devices only when it exceeds a device's fair share
+``ceil(live / D)``. The chunk is then ONE sharded call
+(``shard_map`` over the instance axis): every device receives its
+``cap``-row block plus a scalar ``block_sid`` and runs a *scalar*
+``lax.switch`` — an HLO conditional that executes only that device's
+scenario branch at runtime — so heterogeneous scenarios run concurrently
+on different devices with no cross-device communication inside the chunk
+and no vmapped-switch tax. Blocks that must mix scenarios (more groups
+than capacity allows) carry ``block_sid = -1`` and fall back to the
+per-row vmapped switch for that block only. The host-side gather/scatter
+at the chunk boundary is the only data movement, and every
+:class:`SweepState` stays in logical instance order — so recording,
+fault masks, checkpoints and aggregation are sharding-agnostic by
+construction, and 1-device and N-device runs are bit-for-bit identical
+(tests/test_sharded.py).
 """
 
 from __future__ import annotations
@@ -66,6 +88,24 @@ DISPATCH_MODES = ("auto", "switch", "grouped")
 
 @dataclass(frozen=True)
 class SweepConfig:
+    """Static description of one sweep — the paper's batch-job submission.
+
+    ``n_instances`` independent simulations, each running
+    ``steps_per_instance`` physics steps (or its own drawn horizon when
+    ``vary_horizon``), executed in ``chunk_steps``-step walltime slices.
+    ``dispatch`` picks how a mixed-scenario chunk maps onto compiled
+    programs: ``"switch"`` = ONE vmapped ``lax.switch`` program (every
+    branch executes for every instance — up to k× step work on a
+    k-scenario mix; the parity oracle), ``"grouped"`` = the chunk planner
+    repacks instances per scenario into dense switch-free calls (and into
+    per-device LPT blocks on a multi-device mesh), ``"auto"`` = grouped
+    iff the roster is mixed. All modes are bit-for-bit
+    trajectory-equivalent. ``record`` (a
+    :class:`~repro.core.record.RecordConfig`) turns on the Phase-III
+    trajectory channel. The config is hashable (a jit compile-time
+    constant) and fully determines the sweep together with ``seed``.
+    """
+
     n_instances: int = 48          # the paper's experiment: 6 nodes x 8 = 48
     steps_per_instance: int = 9000 # 15 sim-minutes at dt=0.1
     chunk_steps: int = 1500        # one "walltime slice"
@@ -138,19 +178,46 @@ class GroupPlan:
     identity: bool     # take == arange(N): gather/scatter can be skipped
 
 
-def _pad_group(idx: np.ndarray, pad_pool: np.ndarray, n_workers: int):
-    """Pad ``idx`` to a multiple of the worker count.
-
-    Padding rows come from ``pad_pool`` (finished instances, cycled) so no
-    live instance is stepped twice per chunk; only when nothing has finished
-    yet do we fall back to repeating the group's first live instance. Either
-    way the padding rows' results are dropped by the scatter.
+def _partition_live(
+    done: np.ndarray,
+    scenario_ids: np.ndarray,
+    *,
+    grouped: bool,
+    compaction: bool,
+) -> tuple[np.ndarray, np.ndarray, list[tuple[int, np.ndarray]]]:
+    """Shared first stage of BOTH planners (single-device group plans and
+    multi-device block plans — they must never diverge, the bit-for-bit
+    equivalence claims rest on it): the live set (pending instances under
+    compaction, everyone otherwise), the done-pool padding source, and the
+    per-roster ``(roster, ids)`` groups (one ``-1`` group when not
+    grouped).
     """
+    n = done.size
+    live = np.flatnonzero(~done) if compaction else np.arange(n)
+    pad_pool = np.flatnonzero(done)
+    if grouped:
+        rosters = np.unique(scenario_ids[live])
+        groups = [(int(r), live[scenario_ids[live] == r]) for r in rosters]
+    else:
+        groups = [(-1, live)]
+    return live, pad_pool, groups
+
+
+def _pad_fill(pad_pool: np.ndarray, fallback: np.ndarray) -> np.ndarray:
+    """The padding source both planners share: finished instances when any
+    exist (so no live instance is stepped twice per chunk), else the given
+    live fallback row — either way the padding rows' results are dropped
+    by the keep-masked scatter."""
+    return pad_pool if pad_pool.size else fallback
+
+
+def _pad_group(idx: np.ndarray, pad_pool: np.ndarray, n_workers: int):
+    """Pad ``idx`` to a multiple of the worker count (see :func:`_pad_fill`;
+    the fallback row here is the group's own first live instance)."""
     pad = (-idx.size) % max(n_workers, 1)
     if pad == 0:
         return idx, idx.size
-    fill_src = pad_pool if pad_pool.size else idx[:1]
-    fill = np.resize(fill_src, pad)
+    fill = np.resize(_pad_fill(pad_pool, idx[:1]), pad)
     return np.concatenate([idx, fill]), idx.size
 
 
@@ -170,15 +237,11 @@ def plan_chunk(
     empty plan when nothing is pending.
     """
     n = done.size
-    live = np.flatnonzero(~done) if compaction else np.arange(n)
+    live, pad_pool, groups = _partition_live(
+        done, scenario_ids, grouped=grouped, compaction=compaction
+    )
     if live.size == 0:
         return []
-    pad_pool = np.flatnonzero(done)
-    if grouped:
-        rosters = np.unique(scenario_ids[live])
-        groups = [(int(r), live[scenario_ids[live] == r]) for r in rosters]
-    else:
-        groups = [(-1, live)]
     plans = []
     for roster, idx in groups:
         take, keep = _pad_group(idx, pad_pool, n_workers)
@@ -190,23 +253,160 @@ def plan_chunk(
     return plans
 
 
-def _instance_sharding(mesh: Mesh | None):
+@dataclass(frozen=True)
+class BlockPlan:
+    """A device-blocked chunk execution plan — ONE sharded call per chunk.
+
+    Device ``d`` owns rows ``take[d*cap : (d+1)*cap]`` of the gathered
+    batch. ``keep`` marks the rows whose results are scattered back to
+    their logical slots (padding rows — already-done instances, or a
+    repeated live row when nothing has finished yet — are dropped).
+    ``block_sid[d]`` is the roster index every row of device ``d``'s block
+    runs (the per-device scalar ``lax.switch`` selector), or ``-1`` for a
+    mixed block that falls back to the per-row vmapped switch.
+    """
+
+    take: np.ndarray       # [D*cap] logical ids (gather order)
+    keep: np.ndarray       # [D*cap] bool — True where results are kept
+    block_sid: np.ndarray  # [D] i32 — roster id per device block; -1 = mixed
+    cap: int               # rows per device (multiple of workers_per_device)
+    identity: bool         # take == arange(N), all kept: skip gather/scatter
+
+    @property
+    def n_devices(self) -> int:
+        return self.block_sid.size
+
+
+def plan_chunk_blocks(
+    done: np.ndarray,
+    scenario_ids: np.ndarray,
+    n_devices: int,
+    workers_per_device: int = 1,
+    *,
+    grouped: bool,
+    compaction: bool,
+) -> BlockPlan | None:
+    """Pack one chunk's live instances into per-device-balanced blocks.
+
+    The sharded analogue of :func:`plan_chunk` — instead of one global
+    compaction (or one dense batch per scenario), the live set is packed
+    onto ``n_devices`` device blocks by LPT, echoing the paper's node-level
+    longest-job-first packing:
+
+    1. partition live instances by scenario (when ``grouped``; otherwise a
+       single roster ``-1`` group runs the vmapped-switch program),
+    2. split any group larger than the fair share ``ceil(live / D)`` into
+       fair-share-sized pieces (a group is split across devices ONLY when
+       it cannot fit on one device — property-tested),
+    3. LPT: place pieces largest-first onto the least-loaded device,
+    4. ``cap`` = max device load rounded up to a ``workers_per_device``
+       multiple; every block is padded to ``cap`` with already-done
+       instances (whose rollout is a masked no-op and whose results are
+       dropped), falling back to repeating a live row before anything has
+       finished.
+
+    A device block whose kept rows all share one scenario gets that
+    roster's ``block_sid`` (scalar-switch dispatch: the device executes
+    exactly one scenario branch); blocks forced to mix get ``-1`` (per-row
+    vmapped switch for that block only). Returns ``None`` when nothing is
+    pending. Deterministic: ties are broken by device index and roster id,
+    so the same bitmap always produces the same plan.
+    """
+    n = done.size
+    live, pad_pool, groups = _partition_live(
+        done, scenario_ids, grouped=grouped, compaction=compaction
+    )
+    if live.size == 0:
+        return None
+    d_count = max(n_devices, 1)
+    wpd = max(workers_per_device, 1)
+    # fair share per device; pieces never exceed it, so LPT never needs to
+    # split a piece and a group spans >1 device only when it must
+    fair = -(-live.size // d_count)
+    pieces: list[tuple[int, np.ndarray]] = []
+    for roster, idx in groups:
+        for s in range(0, idx.size, fair):
+            pieces.append((roster, idx[s : s + fair]))
+    pieces.sort(key=lambda p: (-p[1].size, p[0]))  # LPT order, deterministic
+    loads = np.zeros(d_count, np.int64)
+    bins: list[list[tuple[int, np.ndarray]]] = [[] for _ in range(d_count)]
+    for roster, idx in pieces:
+        d = int(np.argmin(loads))  # least-loaded; argmin = lowest index tie
+        bins[d].append((roster, idx))
+        loads[d] += idx.size
+    cap = max(int(loads.max()), 1)
+    cap = -(-cap // wpd) * wpd
+    take = np.empty(d_count * cap, np.int64)
+    keep = np.zeros(d_count * cap, bool)
+    block_sid = np.zeros(d_count, np.int32)
+    fill_src = _pad_fill(pad_pool, live[:1])
+    for d in range(d_count):
+        ids = (
+            np.concatenate([idx for _, idx in bins[d]])
+            if bins[d]
+            else np.empty(0, np.int64)
+        )
+        rosters_d = {roster for roster, _ in bins[d]}
+        if len(rosters_d) == 1:
+            block_sid[d] = rosters_d.pop()  # may be -1 (switch program)
+        elif len(rosters_d) > 1:
+            block_sid[d] = -1               # mixed block: per-row switch
+        # an all-padding block runs any branch: its rows are done
+        # instances whose rollout no-ops and whose results are dropped
+        pad = cap - ids.size
+        row = np.concatenate([ids, np.resize(fill_src, pad)]) if pad else ids
+        take[d * cap : (d + 1) * cap] = row
+        keep[d * cap : d * cap + ids.size] = True
+    identity = bool(
+        take.size == n and keep.all() and np.array_equal(take, np.arange(n))
+    )
+    return BlockPlan(take=take, keep=keep, block_sid=block_sid, cap=cap,
+                     identity=identity)
+
+
+def instance_sharding(mesh: Mesh | None):
+    """The canonical sweep sharding: instance axis split over every mesh
+    axis (``PartitionSpec(mesh.axis_names)``), everything else replicated.
+    ``None`` mesh → ``None`` (single-device default placement)."""
     if mesh is None:
         return None
     return NamedSharding(mesh, P(mesh.axis_names))  # instance axis over all
 
 
-class SweepRunner:
-    """Drives a sweep to 100 % completion in walltime-slice chunks."""
+_instance_sharding = instance_sharding  # back-compat alias
 
-    def __init__(self, cfg: SweepConfig, mesh: Mesh | None = None) -> None:
+
+class SweepRunner:
+    """Drives a sweep to 100 % completion in walltime-slice chunks.
+
+    ``mesh`` (a 1-D device mesh, see :func:`repro.launch.mesh.make_host_mesh`)
+    turns on the device-sharded executor: with D > 1 devices every chunk is
+    ONE ``shard_map`` call over LPT-packed per-device blocks (module
+    docstring). ``workers_per_device`` is the block-size granularity — the
+    launcher's ``--workers`` flag: each device's block is padded to a
+    multiple of it, and the fault injector's worker count is
+    ``D * workers_per_device`` (the paper's nodes × instances-per-node).
+    """
+
+    def __init__(
+        self,
+        cfg: SweepConfig,
+        mesh: Mesh | None = None,
+        workers_per_device: int = 1,
+    ) -> None:
         if cfg.dispatch not in DISPATCH_MODES:
             raise ValueError(
                 f"dispatch must be one of {DISPATCH_MODES}, got {cfg.dispatch!r}"
             )
+        if workers_per_device < 1:
+            raise ValueError(
+                f"workers_per_device must be >= 1, got {workers_per_device}"
+            )
         self.cfg = cfg
         self.mesh = mesh
-        self.sharding = _instance_sharding(mesh)
+        self.sharding = instance_sharding(mesh)
+        self.workers_per_device = workers_per_device
+        self.n_devices = len(mesh.devices.flat) if mesh is not None else 1
         self.dispatch = cfg.effective_dispatch
         # one SimConfig per roster entry; every branch shares shapes, so the
         # switch path compiles a mixed sweep into a single SPMD program
@@ -245,6 +445,72 @@ class SweepRunner:
                     rollout_chunk_rec, cfg=s, n_steps=cfg.chunk_steps, rec=rec
                 )))
         self._roster_fns = tuple(by_sim[s] for s in self._sims)
+        if self.n_devices > 1:
+            self._build_block_fns()
+
+    def _build_block_fns(self) -> None:
+        """The D>1 executors: one ``shard_map`` program per chunk.
+
+        Two jitted variants, compiled lazily on first use:
+
+        - ``_block_fn_uniform`` — every device block is single-scenario:
+          a per-device *scalar* ``lax.switch`` (an HLO conditional — the
+          device executes only its own scenario's rollout at runtime).
+        - ``_block_fn_full`` — adds the mixed-block fallback: a scalar
+          ``lax.cond`` picks between the scalar switch and a per-row
+          vmapped switch, so a ``block_sid = -1`` block pays the k× switch
+          tax while uniform blocks on other devices don't. Only used for
+          plans that actually contain a mixed block.
+        """
+        cfg, rec, sims = self.cfg, self.cfg.record, self._sims
+        mesh = self.mesh
+        branch_fns = [
+            jax.vmap(functools.partial(
+                rollout_chunk_rec, cfg=s, n_steps=cfg.chunk_steps, rec=rec
+            ))
+            for s in sims
+        ]
+        row_branches = tuple(
+            functools.partial(rollout_chunk_rec, cfg=s,
+                              n_steps=cfg.chunk_steps, rec=rec)
+            for s in sims
+        )
+
+        def uniform(ops, block_sid):
+            if len(branch_fns) == 1:
+                return branch_fns[0](*ops)
+            return jax.lax.switch(jnp.maximum(block_sid, 0), branch_fns, *ops)
+
+        def mixed(ops, row_sid):
+            st, m, sp, h, tr = ops
+            return jax.vmap(
+                lambda st, m, sp, h, tr, sid: jax.lax.switch(
+                    sid, row_branches, st, m, sp, h, tr
+                )
+            )(st, m, sp, h, tr, row_sid)
+
+        def block_uniform(st, m, sp, h, tr, row_sid, block_sid):
+            return uniform((st, m, sp, h, tr), block_sid[0])
+
+        def block_full(st, m, sp, h, tr, row_sid, block_sid):
+            ops = (st, m, sp, h, tr)
+            return jax.lax.cond(
+                block_sid[0] >= 0,
+                lambda o: uniform(o, block_sid[0]),
+                lambda o: mixed(o, row_sid),
+                ops,
+            )
+
+        from jax.experimental.shard_map import shard_map
+
+        spec = P(mesh.axis_names)
+        wrap = lambda f: jax.jit(shard_map(  # noqa: E731
+            f, mesh=mesh, in_specs=spec, out_specs=spec
+        ))
+        self._block_fn_uniform = wrap(block_uniform)
+        self._block_fn_full = (
+            wrap(block_full) if len(sims) > 1 else self._block_fn_uniform
+        )
 
     # ---------------- init ----------------
 
@@ -300,7 +566,14 @@ class SweepRunner:
         return self._place(state)
 
     def _place(self, state: SweepState) -> SweepState:
-        if self.sharding is None:
+        """Shard the resting [N] state over the mesh when N divides evenly.
+
+        Otherwise the logical-order state stays on default placement — the
+        per-chunk gathered batch (always ``D*cap`` rows) is what actually
+        gets sharded for compute (:meth:`_run_block`), so an indivisible
+        instance count costs one extra host-side repack, never correctness.
+        """
+        if self.sharding is None or self.cfg.n_instances % self.n_devices:
             return state
         shard = self.sharding
 
@@ -312,25 +585,26 @@ class SweepRunner:
         return jax.tree.map(put, state)
 
     def _n_workers(self) -> int:
-        return len(self.mesh.devices.flat) if self.mesh is not None else 1
+        """Total worker slots: mesh devices × per-device instances.
+
+        The fault injector and the planner's padding granularity both key
+        on this — the paper's ``nodes × instances-per-node`` (6 × 8 = 48).
+        """
+        return self.n_devices * self.workers_per_device
 
     # ---------------- one walltime slice ----------------
 
-    def plan_chunk(self, state: SweepState) -> list[GroupPlan]:
-        """The chunk execution plan for the current completion bitmap."""
-        cfg = self.cfg
-        grouped = self.dispatch == "grouped"
-        if not cfg.compaction and not grouped:
-            # full-width switch program: no repacking needed
-            n = cfg.n_instances
-            return [GroupPlan(roster=-1, take=np.arange(n), keep=n,
-                              identity=True)]
-        # partition on the state's own assignment (not an assumed round-robin)
-        # so grouped dispatch honors whatever scenario_id a restored or
-        # hand-built state carries, like the switch program does — except
-        # that lax.switch silently clamps out-of-range ids; here that would
-        # mean stepping an instance with the wrong scenario's physics, so
-        # reject it loudly (it only happens on config drift at restore time)
+    def _host_bitmap(self, state: SweepState) -> tuple[np.ndarray, np.ndarray]:
+        """Pull (done, scenario_id) to host and validate the assignment.
+
+        The planner partitions on the state's own assignment (not an
+        assumed round-robin) so grouped dispatch honors whatever
+        scenario_id a restored or hand-built state carries, like the
+        switch program does — except that lax.switch silently clamps
+        out-of-range ids; here that would mean stepping an instance with
+        the wrong scenario's physics, so reject it loudly (it only happens
+        on config drift at restore time).
+        """
         done, sids = jax.device_get((state.done, state.scenario_id))
         done, sids = np.asarray(done), np.asarray(sids)
         if sids.size and (sids.min() < 0 or sids.max() >= len(self._sims)):
@@ -339,14 +613,90 @@ class SweepRunner:
                 f"entry roster {self.cfg.scenarios} — was this state "
                 "restored from a sweep with a different scenario_mix?"
             )
+        return done, sids
+
+    def plan_chunk(self, state: SweepState) -> list[GroupPlan]:
+        """The (single-device) chunk execution plan for the current bitmap."""
+        cfg = self.cfg
+        grouped = self.dispatch == "grouped"
+        if not cfg.compaction and not grouped:
+            # full-width switch program: no repacking needed
+            n = cfg.n_instances
+            return [GroupPlan(roster=-1, take=np.arange(n), keep=n,
+                              identity=True)]
+        done, sids = self._host_bitmap(state)
         return plan_chunk(done, sids, self._n_workers(),
                           grouped=grouped, compaction=cfg.compaction)
 
+    def plan_chunk_sharded(self, state: SweepState) -> BlockPlan | None:
+        """The D>1 plan: per-device LPT blocks (:func:`plan_chunk_blocks`)."""
+        done, sids = self._host_bitmap(state)
+        return plan_chunk_blocks(
+            done, sids, self.n_devices, self.workers_per_device,
+            grouped=self.dispatch == "grouped",
+            compaction=self.cfg.compaction,
+        )
+
     def run_chunk(self, state: SweepState) -> SweepState:
-        for plan in self.plan_chunk(state):
-            state = self._run_group(state, plan)
+        """Advance every pending instance by one walltime slice.
+
+        Dispatch is asynchronous: the returned state's arrays are futures
+        the devices are still computing — callers only block when they
+        read them (``jax.device_get`` / ``block_until_ready``), which is
+        what the pipelined run loop exploits to overlap host I/O with
+        device compute (:func:`repro.core.fault.run_with_failures`).
+        """
+        if self.n_devices > 1:
+            bp = self.plan_chunk_sharded(state)
+            if bp is not None:
+                state = self._run_block(state, bp)
+        else:
+            for plan in self.plan_chunk(state):
+                state = self._run_group(state, plan)
         done = state.sim.t >= state.horizon
         return state._replace(done=done, chunk=state.chunk + 1)
+
+    def _run_block(self, state: SweepState, bp: BlockPlan) -> SweepState:
+        """Gather per-device blocks, run ONE sharded call, scatter back.
+
+        The gather + explicit ``device_put`` onto the instance sharding is
+        the chunk's only data movement; inside the ``shard_map`` call each
+        device steps its own rows with zero collectives.
+        """
+        take = jnp.asarray(bp.take)
+        if bp.identity:
+            sub = (state.sim, state.metrics, state.params, state.horizon,
+                   state.trace)
+            row_sid = state.scenario_id
+        else:
+            sub = jax.tree.map(
+                lambda x: x[take],
+                (state.sim, state.metrics, state.params, state.horizon,
+                 state.trace),
+            )
+            row_sid = state.scenario_id[take]
+        sub = jax.device_put(sub, self.sharding)
+        row_sid = jax.device_put(row_sid, self.sharding)
+        bsid = jax.device_put(jnp.asarray(bp.block_sid), self.sharding)
+        fn = (
+            self._block_fn_full
+            if (bp.block_sid < 0).any()
+            else self._block_fn_uniform
+        )
+        sim, metrics, trace = fn(*sub, row_sid, bsid)
+        if bp.identity:
+            return state._replace(sim=sim, metrics=metrics, trace=trace)
+        kept = jnp.asarray(np.flatnonzero(bp.keep))
+        upd = jnp.asarray(bp.take[bp.keep])
+
+        def scatter(full, part):
+            return full.at[upd].set(part[kept])
+
+        return state._replace(
+            sim=jax.tree.map(scatter, state.sim, sim),
+            metrics=jax.tree.map(scatter, state.metrics, metrics),
+            trace=jax.tree.map(scatter, state.trace, trace),
+        )
 
     def _run_group(self, state: SweepState, plan: GroupPlan) -> SweepState:
         """Gather one plan group, step it, scatter results to logical slots.
@@ -415,9 +765,17 @@ class SweepRunner:
     # ---------------- elastic re-meshing ----------------
 
     def remesh(self, state: SweepState, mesh: Mesh | None) -> SweepState:
-        """Move a sweep onto a different mesh (elastic scale up/down)."""
+        """Move a sweep onto a different mesh (elastic scale up/down).
+
+        Logical state is untouched — only placement and the block
+        executors change — so a checkpoint taken on N devices resumes on
+        M devices bit-for-bit (tests/test_sharded.py).
+        """
         self.mesh = mesh
-        self.sharding = _instance_sharding(mesh)
+        self.sharding = instance_sharding(mesh)
+        self.n_devices = len(mesh.devices.flat) if mesh is not None else 1
+        if self.n_devices > 1:
+            self._build_block_fns()
         return self._place(state)
 
 

@@ -64,7 +64,13 @@ class DatasetWriter:
     Call :meth:`drain` at chunk boundaries (``run_with_failures`` does this
     when handed a writer) and :meth:`finalize` once the sweep completes.
     ``shard_size`` bounds instances per shard; the last shard may be
-    smaller.
+    smaller. The pipelined sweep loop uses the split
+    :meth:`begin_drain` / :meth:`finish_drain` form instead, so the
+    device-side gather is enqueued ahead of the next chunk and the
+    npz/jsonl compression overlaps that chunk's device compute — the
+    written bytes are identical either way. Instances are drained in
+    logical-id order regardless of which device block computed them, so
+    shard layout is device-count- and pipeline-invariant (tested).
     """
 
     def __init__(
@@ -106,6 +112,11 @@ class DatasetWriter:
             max((s["index"] for s in self._shards), default=-1) + 1
         )
         self._pending: dict[int, dict[str, Any]] = {}
+        # ids gathered by a begin_drain whose finish_drain hasn't landed
+        # yet: reserved so overlapping handles can never drain an
+        # instance twice (the no-duplicate-rows guarantee holds for any
+        # look-ahead depth, not just the run loop's 1-chunk pipeline)
+        self._inflight: set[int] = set()
 
     @staticmethod
     def _shard_entry(idx: int, ids: list[int]) -> dict[str, Any]:
@@ -124,29 +135,48 @@ class DatasetWriter:
 
     # ---------------- streaming drain ----------------
 
-    def drain(self, state: SweepState) -> int:
-        """Buffer every newly-finished instance; flush full shards.
+    def begin_drain(self, state: SweepState, done: np.ndarray | None = None):
+        """Enqueue the device-side gather for every newly-finished instance.
 
-        Call after fault handling: a ``done`` bit is only trusted once the
-        chunk's failure injection can no longer revert it. Returns how many
-        instances were newly drained.
+        Returns an opaque handle for :meth:`finish_drain`, or ``None`` when
+        nothing new finished. The gather is dispatched asynchronously and
+        ONLY covers the newly-done rows (the trace slab is the bulk of the
+        state and most of it belongs to instances that are still running or
+        already persisted). Nothing is pulled to host or written yet — the
+        pipelined sweep loop calls this *before* dispatching the next
+        chunk, so the gather lands on the device stream ahead of the next
+        chunk's work, and the host-side :meth:`finish_drain` then overlaps
+        that chunk's compute.
+
+        ``done`` lets a caller that already synced the completion bitmap
+        pass it in; otherwise it is read from ``state``.
         """
-        done = np.asarray(jax.device_get(state.done))
+        if done is None:
+            done = np.asarray(jax.device_get(state.done))
         new = [
             int(i) for i in np.flatnonzero(done)
-            if int(i) not in self._written and int(i) not in self._pending
+            if int(i) not in self._written
+            and int(i) not in self._pending
+            and int(i) not in self._inflight
         ]
         if not new:
-            return 0
-        # gather ONLY the newly-done rows on device before pulling to host:
-        # the trace slab is the bulk of the state and most of it belongs to
-        # instances that are still running or already persisted
+            return None
+        self._inflight.update(new)
         idx = jnp.asarray(new)
         sub = jax.tree.map(
             lambda x: x[idx],
             (state.metrics, state.params, state.horizon,
              state.scenario_id, state.trace),
         )
+        return (new, sub)
+
+    def finish_drain(self, handle) -> int:
+        """Pull a :meth:`begin_drain` gather to host, buffer it, flush full
+        shards. Returns how many instances were newly drained."""
+        if handle is None:
+            return 0
+        new, sub = handle
+        self._inflight.difference_update(new)
         metrics, params, horizon, sids, trace = jax.tree.map(
             np.asarray, jax.device_get(sub)
         )
@@ -161,6 +191,16 @@ class DatasetWriter:
         while len(self._pending) >= self.shard_size:
             self._flush_one_shard()
         return len(new)
+
+    def drain(self, state: SweepState) -> int:
+        """Synchronous drain: gather + persist every newly-finished
+        instance in one call (``begin_drain`` + ``finish_drain``).
+
+        Call after fault handling: a ``done`` bit is only trusted once the
+        chunk's failure injection can no longer revert it. Returns how
+        many instances were newly drained.
+        """
+        return self.finish_drain(self.begin_drain(state))
 
     def _flush_one_shard(self) -> None:
         ids = sorted(self._pending)[: self.shard_size]

@@ -6,6 +6,22 @@ failure injection and checkpointing:
 
 ``python -m repro.launch.sweep --instances 48 --fail-prob 0.1 --ckpt-dir /tmp/sw``
 
+Device sharding (the paper's "across an arbitrary number of computing
+nodes"): ``--devices N`` sizes the 1-D device mesh the instance axis is
+sharded over. On a CPU host it also *simulates* N devices by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+initializes — same code path as a real N-accelerator host. ``--workers W``
+is the per-device instance granularity (the paper's instances-per-node),
+so the fault injector models an ``N × W`` grid and the planner pads each
+device block to a multiple of W:
+
+``python -m repro.launch.sweep --devices 4 --workers 8 --instances 32``
+
+``--pipeline`` (default on) overlaps host I/O — checkpoint writes, dataset
+shard compression — with device compute by deferring chunk c's file I/O
+until chunk c+1 has been dispatched; ``--no-pipeline`` forces the fully
+synchronous loop (bit-for-bit identical output either way).
+
 Scenario selection (the registry catalog, ``repro.core.scenarios``):
 
 ``python -m repro.launch.sweep --scenario lane_drop``
@@ -17,9 +33,11 @@ Scenario selection (the registry catalog, ``repro.core.scenarios``):
 
 Mixed-sweep dispatch (``--dispatch``, default ``auto``): ``grouped`` repacks
 instances per scenario into dense switch-free compiled calls each chunk
-(~k× faster on a k-scenario mix); ``switch`` keeps the single-compile
-vmapped ``lax.switch`` program; ``auto`` picks grouped whenever the roster
-is mixed. Both modes are bit-for-bit trajectory-equivalent.
+(~k× faster on a k-scenario mix; on a multi-device mesh the groups are
+LPT-packed into per-device blocks instead); ``switch`` keeps the
+single-compile vmapped ``lax.switch`` program; ``auto`` picks grouped
+whenever the roster is mixed. All modes are bit-for-bit
+trajectory-equivalent.
 
 Phase-III dataset output (``--dataset-dir``): turns on trajectory recording
 (``repro.core.record``) and streams every finished instance's time series +
@@ -35,21 +53,56 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
-from repro.ckpt import CheckpointManager
-from repro.core.aggregate import aggregate_metrics, metrics_to_records
-from repro.core.fault import FailureInjector, run_with_failures
-from repro.core.record import RecordConfig
-from repro.core.scenario import SimConfig
-from repro.core.scenarios import list_scenarios
-from repro.core.sweep import SweepConfig, SweepRunner
-from repro.data.shards import DatasetWriter
-from repro.launch.mesh import make_host_mesh
+
+def _preparse_devices(argv: list[str]) -> int | None:
+    """Extract ``--devices N`` from argv WITHOUT importing jax.
+
+    ``--xla_force_host_platform_device_count`` only works before the
+    backend initializes, so the launcher must set it before the real
+    argparse run (whose ``choices=list_scenarios()`` pulls in jax). Only
+    the exact ``--devices``/``--devices=`` spellings match — the real
+    parser runs with ``allow_abbrev=False`` so no other spelling is
+    accepted there either — and malformed values are left for argparse to
+    reject with a proper usage error.
+    """
+    for i, a in enumerate(argv):
+        value = None
+        if a == "--devices" and i + 1 < len(argv):
+            value = argv[i + 1]
+        elif a.startswith("--devices="):
+            value = a.split("=", 1)[1]
+        if value is not None:
+            try:
+                return int(value)
+            except ValueError:
+                return None  # argparse prints the clean error
+    return None
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    devices = _preparse_devices(sys.argv[1:])
+    if devices is not None and devices >= 1 and "jax" not in sys.modules:
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(devices)
+
+    # heavy imports AFTER the device-count flag is in place
+    from repro.ckpt import CheckpointManager
+    from repro.core.aggregate import aggregate_metrics, metrics_to_records
+    from repro.core.fault import FailureInjector, run_with_failures
+    from repro.core.record import RecordConfig
+    from repro.core.scenario import SimConfig
+    from repro.core.scenarios import list_scenarios
+    from repro.core.sweep import SweepConfig, SweepRunner
+    from repro.data.shards import DatasetWriter
+    from repro.launch.mesh import make_host_mesh
+
+    # allow_abbrev off: the --devices pre-parse above matches exact
+    # spellings only, so abbreviations must not silently bypass it
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--instances", type=int, default=48)
     ap.add_argument("--steps", type=int, default=1200)
     ap.add_argument("--chunk-steps", type=int, default=400)
@@ -73,9 +126,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--vary-horizon", action="store_true")
     ap.add_argument("--fail-prob", type=float, default=0.0)
-    ap.add_argument("--workers", type=int, default=None,
-                    help="cap the worker-mesh size (default: all devices); "
-                         "failure injection is sized from the actual mesh")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device-mesh size the instance axis is sharded "
+                         "over (default: all visible devices); on CPU "
+                         "also forces that many simulated host devices")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="instances per device (the paper's per-node "
+                         "parallelism): failure injection models a "
+                         "devices x workers grid and device blocks are "
+                         "padded to a multiple of this")
+    ap.add_argument("--pipeline", dest="pipeline", action="store_true",
+                    default=True,
+                    help="overlap host I/O (checkpoints, dataset shards) "
+                         "with device compute (default)")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="fully synchronous chunk loop (same bits, "
+                         "no overlap)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write records JSON here")
     ap.add_argument("--dataset-dir", default=None,
@@ -89,6 +155,10 @@ def main() -> None:
     ap.add_argument("--shard-size", type=int, default=16,
                     help="instances per dataset shard")
     args = ap.parse_args()
+    if args.workers < 1:
+        ap.error("--workers must be >= 1 (instances per device)")
+    if args.devices is not None and args.devices < 1:
+        ap.error("--devices must be >= 1")
 
     record_every = args.record_every
     if args.dataset_dir and record_every == 0:
@@ -120,11 +190,13 @@ def main() -> None:
         dispatch=args.dispatch,
         record=record,
     )
-    # the mesh is the source of truth for worker count: --workers sizes the
-    # mesh, and the injector is sized from whatever mesh actually exists
-    mesh = make_host_mesh(max_workers=args.workers)
-    runner = SweepRunner(cfg, mesh=mesh)
-    n_workers = int(mesh.devices.size)
+    # the mesh is the source of truth for device count; --workers adds the
+    # per-device instance granularity, and the injector models the full
+    # devices x workers worker grid (the paper's nodes x instances-per-node)
+    mesh = make_host_mesh(max_workers=args.devices)
+    runner = SweepRunner(cfg, mesh=mesh, workers_per_device=args.workers)
+    n_devices = int(mesh.devices.size)
+    n_workers = runner._n_workers()
     injector = FailureInjector.random(
         n_workers=n_workers,
         n_chunks=max(args.steps // args.chunk_steps * 3, 8),
@@ -140,11 +212,13 @@ def main() -> None:
 
     print(f"[sweep] scenarios: {', '.join(cfg.scenarios)} "
           f"({'mixed round-robin' if len(cfg.scenarios) > 1 else 'uniform'}) "
-          f"| dispatch {cfg.effective_dispatch} | {n_workers} worker(s)"
+          f"| dispatch {cfg.effective_dispatch} "
+          f"| {n_devices} device(s) x {args.workers} worker(s) "
+          f"| {'pipelined' if args.pipeline else 'synchronous'} I/O"
           + (f" | recording every {record_every} steps" if record else ""))
     t0 = time.perf_counter()
     state, info = run_with_failures(
-        runner, injector, ckpt=ckpt, writer=writer,
+        runner, injector, ckpt=ckpt, writer=writer, pipeline=args.pipeline,
         on_progress=lambda c, done: print(
             f"[sweep] chunk {c}: {done*100:.1f}% complete"
         ),

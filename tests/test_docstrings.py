@@ -1,0 +1,92 @@
+"""Docs-system guardrails: the public surface must stay documented.
+
+The ``docs`` satellite of the sharded-executor PR wrote docstrings (with
+shapes/units) for every exported name in ``repro.core`` and the
+``repro.data`` dataset surface, and pinned the semantics of
+``RecordConfig``, ``SweepConfig.dispatch`` and ``GroupPlan`` in prose
+instead of implying them through tests. This test keeps that from rotting:
+an export added without a real docstring fails here, not in review.
+"""
+
+import inspect
+
+MIN_DOC = 40  # characters: a one-liner is fine, an empty stub is not
+
+
+def _assert_documented(obj, name, owner):
+    doc = inspect.getdoc(obj)
+    assert doc and len(doc) >= MIN_DOC, (
+        f"{owner}.{name} is exported but has no meaningful docstring "
+        f"(got {doc!r})"
+    )
+
+
+def test_core_public_surface_documented():
+    import repro.core as core
+
+    assert core.__doc__ and len(core.__doc__) > 100
+    for name in core.__all__:
+        _assert_documented(getattr(core, name), name, "repro.core")
+
+
+def test_sweep_planner_semantics_documented():
+    """The planner/executor vocabulary is written down, not implied."""
+    from repro.core import record, sweep
+
+    for obj in (
+        sweep.SweepConfig,
+        sweep.SweepState,
+        sweep.GroupPlan,
+        sweep.BlockPlan,
+        sweep.plan_chunk,
+        sweep.plan_chunk_blocks,
+        sweep.instance_sharding,
+        sweep.SweepRunner,
+        sweep.SweepRunner.run_chunk,
+        sweep.SweepRunner.run,
+        sweep.SweepRunner.remesh,
+        record.RecordConfig,
+        record.TraceBuffer,
+    ):
+        _assert_documented(obj, obj.__name__, obj.__module__)
+    # the dispatch contract lives on the config docstring + module doc
+    assert "switch" in sweep.__doc__ and "grouped" in sweep.__doc__
+    assert "LPT" in sweep.__doc__
+    assert "dispatch" in inspect.getdoc(sweep.SweepConfig)
+    assert "record_every" in inspect.getdoc(record.RecordConfig)
+
+
+def test_data_public_surface_documented():
+    from repro.data import shards, sim_dataset
+
+    for obj in (
+        shards.DatasetWriter,
+        shards.DatasetWriter.begin_drain,
+        shards.DatasetWriter.finish_drain,
+        shards.DatasetWriter.drain,
+        shards.DatasetWriter.finalize,
+        shards.ShardedDataset,
+        shards.write_dataset,
+        sim_dataset.sim_token_batches,
+        sim_dataset.sim_token_corpus,
+    ):
+        _assert_documented(obj, obj.__qualname__, obj.__module__)
+
+
+def test_fault_and_mesh_documented():
+    from repro.core import fault
+    from repro.launch import mesh
+
+    for obj in (
+        fault.FailureInjector,
+        fault.FailureInjector.instance_mask,
+        fault.revert_instances,
+        fault.run_with_failures,
+        mesh.make_host_mesh,
+        mesh.force_host_device_count,
+        mesh.instance_sharding,
+    ):
+        _assert_documented(obj, obj.__qualname__, obj.__module__)
+    # the sharding/dispatch-agnosticism guarantee is prose, not folklore
+    assert "logical" in fault.__doc__.lower()
+    assert "sharding" in fault.__doc__.lower()

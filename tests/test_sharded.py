@@ -1,0 +1,474 @@
+"""Device-sharded, pipelined sweep executor (repro.core.sweep BlockPlan path).
+
+The paper distributes a batch of simulations "across an arbitrary number
+of computing nodes"; our executor shards the instance axis over a device
+mesh with LPT-packed per-device blocks and overlaps host I/O with device
+compute. The standing bar, tested here:
+
+- **bit-for-bit parity**: N-device sharded and pipelined runs reproduce
+  the 1-device synchronous trajectories, shards and metrics exactly,
+  including injected failures and checkpoint kill/resume — and a
+  checkpoint taken on N devices resumes on M devices;
+- **planner invariants** (hypothesis): exactly-once scheduling, done-pool
+  padding, per-device blocks sized in ``workers_per_device`` multiples,
+  and LPT never splitting a scenario group across devices when it fits
+  its fair share;
+- **workers × devices composition**: ``--workers`` means instances per
+  device, so the worker grid (fault injection, padding granularity) is
+  ``devices × workers`` — the regression the single-device-era injector
+  derivation used to get wrong.
+
+Runs on simulated CPU devices (the module forces
+``--xla_force_host_platform_device_count=8`` before jax initializes, the
+same mechanism as the launcher's ``--devices``).
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules or "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from conftest import assert_states_equal
+from repro.ckpt import CheckpointManager
+from repro.core import SimConfig
+from repro.core.fault import FailureInjector, run_with_failures
+from repro.core.record import RecordConfig
+from repro.core.sweep import (
+    BlockPlan,
+    SweepConfig,
+    SweepRunner,
+    completion_rate,
+    plan_chunk_blocks,
+)
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 (simulated) devices; run with "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+SIM = SimConfig(n_slots=16)
+MIX2 = ("highway_merge", "lane_drop")
+REC = RecordConfig(record_every=10, k_slots=4)
+
+
+def _cfg(**kw):
+    base = dict(
+        n_instances=10,
+        steps_per_instance=80,
+        chunk_steps=40,
+        sim=SIM,
+        seed=3,
+        scenario_mix=MIX2,
+        record=REC,
+        vary_horizon=True,
+        min_horizon_frac=0.3,
+    )
+    base.update(kw)
+    return SweepConfig(**base)
+
+
+def _mesh(d):
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:d]), ("workers",))
+
+
+_REF: dict = {}  # the 1-device synchronous reference, computed once
+
+
+def _ref_state():
+    if "state" not in _REF:
+        _REF["state"] = SweepRunner(_cfg()).run()
+    return _REF["state"]
+
+
+# --------------------------------------------------------------------------
+# sharded-vs-single-device parity
+# --------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("dispatch,wpd", [
+    ("grouped", 1), ("grouped", 2), ("switch", 1), ("auto", 2),
+])
+def test_sharded_matches_single_device_bitwise(dispatch, wpd):
+    """A 4-device run — trace buffer included — is bit-for-bit equal to the
+    1-device reference: the LPT block packing is just another physical-row
+    permutation confined to the inside of run_chunk."""
+    runner = SweepRunner(_cfg(dispatch=dispatch), mesh=_mesh(4),
+                         workers_per_device=wpd)
+    got = runner.run()
+    assert completion_rate(got) == 1.0
+    assert_states_equal(_ref_state(), got)
+
+
+@needs_devices
+def test_sharded_device_count_invariance():
+    """2-, 3- and 4-device runs all agree (3 does not divide 10 — the
+    resting state stays unsharded and only the gathered blocks shard)."""
+    ref = _ref_state()
+    for d in (2, 3):
+        got = SweepRunner(_cfg(), mesh=_mesh(d)).run()
+        assert_states_equal(ref, got)
+
+
+@needs_devices
+def test_sharded_failure_parity():
+    """The same injection plan kills the same logical instances on a mesh:
+    failure masks are worker-grid-based, never block-placement-based."""
+    plan = {0: [0], 1: [2, 3]}
+    clean = _ref_state()
+    finals = {}
+    for label, mesh, wpd in (("1dev", None, 4), ("4dev", _mesh(4), 1)):
+        runner = SweepRunner(_cfg(), mesh=mesh, workers_per_device=wpd)
+        injector = FailureInjector(n_workers=4, plan=dict(plan))
+        finals[label], info = run_with_failures(runner, injector)
+        assert info["completion_rate"] == 1.0
+        assert len(info["failure_events"]) == 2
+        assert_states_equal(clean, finals[label]._replace(chunk=clean.chunk))
+
+
+@needs_devices
+def test_resume_across_device_count_change(tmp_path):
+    """A checkpoint taken on a 4-device mesh resumes on 1 device (and the
+    other way round) bit-for-bit — sharding never leaks into the state."""
+    cfg = _cfg()
+    clean = _ref_state()
+    ckpt = CheckpointManager(str(tmp_path / "sw"), async_write=False)
+
+    runner4 = SweepRunner(cfg, mesh=_mesh(4))
+    state = runner4.init()
+    state = runner4.run_chunk(state)
+    ckpt.save(int(jax.device_get(state.chunk)), state)
+
+    # resume the 4-device checkpoint on a single device
+    final, info = run_with_failures(
+        SweepRunner(cfg), FailureInjector(n_workers=4, plan={}), ckpt=ckpt
+    )
+    assert info["completion_rate"] == 1.0
+    assert_states_equal(clean, final)
+
+    # and a 1-device checkpoint on a 4-device mesh
+    ckpt2 = CheckpointManager(str(tmp_path / "sw2"), async_write=False)
+    runner1 = SweepRunner(cfg)
+    state = runner1.init()
+    state = runner1.run_chunk(state)
+    ckpt2.save(int(jax.device_get(state.chunk)), state)
+    final2, info2 = run_with_failures(
+        SweepRunner(cfg, mesh=_mesh(4)),
+        FailureInjector(n_workers=4, plan={}), ckpt=ckpt2,
+    )
+    assert info2["completion_rate"] == 1.0
+    assert_states_equal(clean, final2)
+
+
+@needs_devices
+def test_elastic_remesh_mid_sweep():
+    """remesh() moves a live sweep between device counts mid-run."""
+    runner = SweepRunner(_cfg(), mesh=_mesh(4))
+    state = runner.init()
+    state = runner.run_chunk(state)
+    state = runner.remesh(state, _mesh(2))
+    final = runner.run(state)
+    assert completion_rate(final) == 1.0
+    assert_states_equal(_ref_state(), final)
+
+
+# --------------------------------------------------------------------------
+# pipelined-vs-synchronous parity (state, shards, manifest, checkpoints)
+# --------------------------------------------------------------------------
+
+
+def _run_to_dataset(tmp_path, name, *, pipeline, mesh=None, plan=None):
+    from repro.data.shards import DatasetWriter, ShardedDataset
+
+    cfg = _cfg()
+    root = str(tmp_path / name)
+    runner = SweepRunner(cfg, mesh=mesh)
+    writer = DatasetWriter(root, cfg, shard_size=4)
+    ckpt = CheckpointManager(str(tmp_path / (name + "_ck")),
+                            async_write=False)
+    injector = FailureInjector(n_workers=4, plan=dict(plan or {}))
+    state, info = run_with_failures(runner, injector, ckpt=ckpt,
+                                    writer=writer, pipeline=pipeline)
+    writer.finalize(summary=None, fault_info=info)
+    return state, info, ShardedDataset.load(root)
+
+
+@needs_devices
+@pytest.mark.parametrize("plan", [{}, {0: [1], 1: [0, 2]}])
+def test_pipelined_matches_synchronous_dataset(tmp_path, plan):
+    """Pipelining reorders WHEN files are written, never what: final state,
+    shard npz arrays, jsonl records and manifest shard index are identical
+    to the synchronous loop — with and without injected failures."""
+    s_sync, i_sync, ds_sync = _run_to_dataset(
+        tmp_path, "sync", pipeline=False, plan=plan)
+    s_pipe, i_pipe, ds_pipe = _run_to_dataset(
+        tmp_path, "pipe", pipeline=True, mesh=_mesh(4), plan=plan)
+    assert i_sync["completion_rate"] == i_pipe["completion_rate"] == 1.0
+    assert_states_equal(s_sync, s_pipe)
+    assert ds_sync.manifest["shards"] == ds_pipe.manifest["shards"]
+    for a, b in zip(ds_sync.iter_shards(), ds_pipe.iter_shards()):
+        assert sorted(a) == sorted(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+    assert ds_sync.records() == ds_pipe.records()
+
+
+def test_overlapping_begin_drain_never_duplicates(tmp_path):
+    """Two outstanding begin_drain handles must not drain an instance
+    twice: ids are reserved at begin time, so a deeper look-ahead than the
+    run loop's 1-chunk pipeline still upholds no-duplicate-rows."""
+    from repro.data.shards import DatasetWriter, ShardedDataset
+
+    cfg = SweepConfig(n_instances=4, steps_per_instance=40, chunk_steps=40,
+                      sim=SIM, seed=0, record=REC)
+    state = SweepRunner(cfg).run()
+    w = DatasetWriter(str(tmp_path / "ds"), cfg, shard_size=2)
+    h1 = w.begin_drain(state)
+    h2 = w.begin_drain(state)  # overlapping: everything is already in flight
+    assert h2 is None
+    assert w.finish_drain(h1) == 4
+    assert w.finish_drain(h2) == 0
+    assert w.begin_drain(state) is None  # and persisted ids stay excluded
+    w.finalize()
+    ds = ShardedDataset.load(str(tmp_path / "ds"))
+    assert ds.n_instances == 4
+    assert sorted(r["instance"] for r in ds.records()) == [0, 1, 2, 3]
+
+
+def test_pipelined_checkpoint_kill_resume(tmp_path):
+    """A kill mid-pipelined-run (checkpoint lagging one chunk behind) still
+    resumes to a bit-identical final state — pipeline lag is within what
+    resume already tolerates. Runs on 1 device so it also covers the
+    pipelined loop without a mesh."""
+    cfg = _cfg()
+    ckpt = CheckpointManager(str(tmp_path / "sw"), async_write=False)
+    runner = SweepRunner(cfg)
+    state = runner.init()
+    # two pipelined "iterations" by hand: run_with_failures with max_chunks
+    _, info = run_with_failures(runner, FailureInjector(4, {}), ckpt=ckpt,
+                                pipeline=True, max_chunks=2)
+    # the deferred-flush guarantees the LAST completed chunk is persisted
+    assert ckpt.has_checkpoint()
+    final, info = run_with_failures(
+        SweepRunner(cfg), FailureInjector(4, {}), ckpt=ckpt, pipeline=True
+    )
+    assert info["completion_rate"] == 1.0
+    assert_states_equal(_ref_state(), final)
+
+
+# --------------------------------------------------------------------------
+# workers x devices composition (regression: injector assumed 1 device)
+# --------------------------------------------------------------------------
+
+
+@needs_devices
+def test_workers_compose_with_devices():
+    """--workers is instances PER DEVICE: the worker grid the injector and
+    the planner see is devices x workers, and per-device blocks are padded
+    to a workers multiple."""
+    runner = SweepRunner(_cfg(), mesh=_mesh(4), workers_per_device=2)
+    assert runner._n_workers() == 8
+    bp = runner.plan_chunk_sharded(runner.init())
+    assert bp.cap % 2 == 0
+    assert bp.take.size == 4 * bp.cap
+
+    # a (4 devices x 2 workers) grid and a (1 device x 8 workers) grid see
+    # the SAME logical worker->instance failure map, so injected runs agree
+    plan = {0: [5], 1: [1, 6]}
+    finals = []
+    for mesh, wpd in ((_mesh(4), 2), (None, 8)):
+        r = SweepRunner(_cfg(), mesh=mesh, workers_per_device=wpd)
+        injector = FailureInjector(n_workers=r._n_workers(), plan=dict(plan))
+        st, info = run_with_failures(r, injector)
+        assert info["completion_rate"] == 1.0
+        finals.append(st)
+    assert_states_equal(finals[0], finals[1])
+
+    with pytest.raises(ValueError):
+        SweepRunner(_cfg(), workers_per_device=0)
+
+
+def test_make_host_mesh_rejects_oversubscription():
+    from repro.launch.mesh import make_host_mesh
+
+    with pytest.raises(ValueError):
+        make_host_mesh(max_workers=jax.device_count() + 1)
+    mesh = make_host_mesh(max_workers=1)
+    assert mesh.devices.size == 1
+
+
+def test_force_host_device_count_rewrites_flag(monkeypatch):
+    from repro.launch.mesh import force_host_device_count
+
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        "--foo=1 --xla_force_host_platform_device_count=2",
+    )
+    force_host_device_count(16)
+    assert os.environ["XLA_FLAGS"] == (
+        "--foo=1 --xla_force_host_platform_device_count=16"
+    )
+    with pytest.raises(ValueError):
+        force_host_device_count(0)
+
+
+# --------------------------------------------------------------------------
+# plan_chunk_blocks invariants (hypothesis)
+# --------------------------------------------------------------------------
+
+
+def _check_block_invariants(done, sids, n_devices, wpd, grouped, compaction,
+                            n_scenarios):
+    bp = plan_chunk_blocks(done, sids, n_devices, wpd,
+                           grouped=grouped, compaction=compaction)
+    n = done.size
+    pending = np.flatnonzero(~done)
+    expected = pending if compaction else np.arange(n)
+    if expected.size == 0:
+        assert bp is None
+        return None
+    assert isinstance(bp, BlockPlan)
+    D, cap = n_devices, bp.cap
+    assert cap % wpd == 0 and cap >= 1
+    assert bp.take.size == D * cap and bp.keep.size == D * cap
+    assert bp.block_sid.size == D
+    # every live instance's result is kept EXACTLY once
+    kept = bp.take[bp.keep]
+    assert sorted(kept.tolist()) == sorted(expected.tolist())
+    done_pool = np.flatnonzero(done)
+    pad = bp.take[~bp.keep]
+    if done_pool.size:
+        assert done[pad].all()  # padding only from finished instances
+    else:
+        assert set(pad.tolist()) <= set(expected.tolist())
+    # per-device blocks: uniform blocks are single-scenario on kept rows
+    fair = -(-expected.size // D)
+    device_of = {}
+    for d in range(D):
+        rows = slice(d * cap, (d + 1) * cap)
+        k_ids = bp.take[rows][bp.keep[rows]]
+        for i in k_ids:
+            device_of[int(i)] = d
+        if k_ids.size and grouped:
+            block_scen = set(sids[k_ids].tolist())
+            if bp.block_sid[d] >= 0:
+                assert block_scen == {int(bp.block_sid[d])}
+            else:
+                assert len(block_scen) > 1  # -1 only when genuinely mixed
+        elif k_ids.size:
+            assert bp.block_sid[d] == -1  # switch program
+    # LPT never splits a group that fits its fair share
+    if grouped:
+        for s in np.unique(sids[expected]):
+            members = [int(i) for i in expected if sids[i] == s]
+            if len(members) <= fair:
+                assert len({device_of[i] for i in members}) == 1, (
+                    f"scenario {s} fits ({len(members)} <= {fair}) but was "
+                    f"split across devices"
+                )
+    return bp
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    n_devices=st.integers(1, 8),
+    wpd=st.integers(1, 4),
+    n_scenarios=st.integers(1, 5),
+    grouped=st.booleans(),
+    compaction=st.booleans(),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_property_block_plan_invariants(n, n_devices, wpd, n_scenarios,
+                                        grouped, compaction, seed):
+    """Exactly-once scheduling, done-pool padding, wpd-multiple caps,
+    uniform-block scenario purity, and the LPT no-split guarantee."""
+    rng = np.random.default_rng(seed)
+    done = rng.random(n) < rng.uniform(0.0, 1.0)
+    sids = rng.integers(0, n_scenarios, size=n)
+    _check_block_invariants(done, sids, n_devices, wpd, grouped, compaction,
+                            n_scenarios)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    n_devices=st.integers(1, 8),
+    n_scenarios=st.integers(1, 5),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_property_block_scatter_roundtrip(n, n_devices, n_scenarios, seed):
+    """Gather -> per-block transform -> keep-masked scatter touches every
+    live slot exactly once and no other slot (sharding-agnostic recording
+    rests on this)."""
+    rng = np.random.default_rng(seed)
+    done = rng.random(n) < rng.uniform(0.0, 1.0)
+    sids = rng.integers(0, n_scenarios, size=n)
+    bp = plan_chunk_blocks(done, sids, n_devices, 1,
+                           grouped=True, compaction=True)
+    base = rng.normal(size=n)
+    out = base.copy()
+    if bp is not None:
+        part = out[bp.take] + 1.0
+        out[bp.take[bp.keep]] = part[bp.keep]
+    np.testing.assert_allclose(out[~done], base[~done] + 1.0)
+    np.testing.assert_array_equal(out[done], base[done])
+
+
+def test_block_plan_invariants_seedwise():
+    """The same invariants exercised without hypothesis (which CI installs
+    but minimal environments may not): 200 seeded random bitmaps across
+    the device/worker/scenario grid."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        n = int(rng.integers(1, 40))
+        n_devices = int(rng.integers(1, 9))
+        wpd = int(rng.integers(1, 4))
+        n_scenarios = int(rng.integers(1, 6))
+        done = rng.random(n) < rng.uniform(0.0, 1.0)
+        sids = rng.integers(0, n_scenarios, size=n)
+        _check_block_invariants(done, sids, n_devices, wpd,
+                                bool(rng.integers(2)), bool(rng.integers(2)),
+                                n_scenarios)
+
+
+def test_block_plan_lpt_balance_example():
+    """Deterministic example: 3 groups of sizes 6/3/3 on 2 devices, fair
+    share 6 -> the big group occupies one device whole, the two small
+    groups share the other, both blocks uniform."""
+    done = np.zeros(12, bool)
+    sids = np.array([0] * 6 + [1] * 3 + [2] * 3)
+    bp = plan_chunk_blocks(done, sids, 2, 1, grouped=True, compaction=True)
+    assert bp.cap == 6 and bp.keep.all()
+    blocks = [bp.take[:6], bp.take[6:]]
+    scen = [set(sids[b].tolist()) for b in blocks]
+    assert {0} in scen
+    assert {1, 2} in scen
+    # the shared block is mixed (two scenarios) -> -1; the solo one uniform
+    assert sorted(bp.block_sid.tolist()) == [-1, 0]
+
+
+def test_block_plan_switch_mode_marks_all_mixed():
+    bp = plan_chunk_blocks(np.zeros(8, bool), np.arange(8) % 2, 4, 1,
+                           grouped=False, compaction=False)
+    assert (bp.block_sid == -1).all()
+    assert bp.keep.all()
+
+
+def test_block_plan_empty():
+    assert plan_chunk_blocks(np.ones(4, bool), np.zeros(4, np.int64), 4, 1,
+                             grouped=True, compaction=True) is None
