@@ -1,4 +1,17 @@
-from repro.ckpt.io import save_pytree, load_pytree, latest_step
+from repro.ckpt.io import (
+    save_pytree,
+    load_pytree,
+    latest_step,
+    valid_steps,
+    verify_checkpoint,
+)
 from repro.ckpt.manager import CheckpointManager
 
-__all__ = ["save_pytree", "load_pytree", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "latest_step",
+    "valid_steps",
+    "verify_checkpoint",
+    "CheckpointManager",
+]

@@ -13,7 +13,11 @@
 - :mod:`repro.core.sweep`     — the PBS-job-array analogue: instance sharding
   over the device mesh, walltime-slice chunking.
 - :mod:`repro.core.fault`     — completion bitmap, checkpoint/restart,
-  failure injection, straggler mitigation, elastic re-meshing.
+  failure injection (the full crash/hang/straggler/corruption taxonomy of
+  ``FaultModel``), straggler mitigation, elastic re-meshing.
+- :mod:`repro.core.fleet`     — unattended-run supervision: retry budgets
+  with exponential backoff, quarantine for poison instances, the
+  crash-safe run journal and the §5.2 completion report.
 - :mod:`repro.core.aggregate` — big-data output aggregation (paper §2.10).
 - :mod:`repro.core.tokens`    — trajectory → token streams (Phase III bridge).
 - :mod:`repro.core.metrics`   — throughput/distribution accounting (paper §5).

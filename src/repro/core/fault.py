@@ -75,6 +75,111 @@ class FailureInjector:
         return FailureInjector(n_workers, plan)
 
 
+# the simulator fault taxonomy (Afzal et al. 2020 catalog crashes, hangs
+# and nondeterministic stragglers as the dominant robotics-sim failure
+# modes; corrupted durable writes are the storage-layer analogue)
+FAULT_KINDS = ("crash", "hang", "straggler", "corrupt_ckpt", "corrupt_shard")
+
+
+@dataclasses.dataclass
+class FaultModel(FailureInjector):
+    """Full fault taxonomy for unattended runs — the chaos test harness.
+
+    Extends the crash-only :class:`FailureInjector` (``plan`` stays the
+    worker-crash schedule) with every failure mode the fleet supervisor
+    (:mod:`repro.core.fleet`) must degrade gracefully under:
+
+    - ``hangs``: chunk → workers that exceed the per-chunk deadline. The
+      supervisor times them out and reverts their instances — same state
+      effect as a crash, distinct journal event (and, in the process
+      controller, a real heartbeat-loss SIGKILL).
+    - ``stragglers``: chunk → workers that run slow but finish within
+      deadline. Graceful path: results are KEPT, the event is journaled
+      (the paper's straggler mitigation is compaction, not re-execution).
+    - ``poison_instances``: logical instance ids that kill their worker
+      *every* chunk they are scheduled — the retry-budget/quarantine
+      stressor. Only the poison instance itself is reverted and charged,
+      so quarantining it frees the rest of the fleet.
+    - ``corrupt_ckpt`` / ``corrupt_shard``: chunk indices after whose
+      checkpoint save / shard drain the newest durable artifact is
+      truncated on disk — exercising digest-validated restore fallback
+      and the dataset writer's shard re-scan.
+
+    All channels address the same static ``devices × workers_per_device``
+    grid as the base class, so the taxonomy stays dispatch-, compaction-
+    and sharding-agnostic.
+    """
+
+    hangs: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    stragglers: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    poison_instances: tuple[int, ...] = ()
+    corrupt_ckpt: frozenset = frozenset()
+    corrupt_shard: frozenset = frozenset()
+
+    def lost_workers(self, chunk: int) -> list[tuple[str, int]]:
+        """Workers whose chunk results are lost, with the fault kind —
+        crashes plus hangs (a timed-out worker loses the slice exactly
+        like a dead one; only the journal event differs)."""
+        return [("crash", w) for w in self.plan.get(chunk, [])] + [
+            ("hang", w) for w in self.hangs.get(chunk, [])
+        ]
+
+    def failed_workers(self, chunk: int) -> list[int]:
+        """Back-compat surface for :func:`run_with_failures`: every worker
+        whose slice is lost this chunk (crashes AND hangs)."""
+        return [w for _, w in self.lost_workers(chunk)]
+
+    def straggler_workers(self, chunk: int) -> list[int]:
+        return self.stragglers.get(chunk, [])
+
+    def worker_mask(self, worker: int, n_instances: int) -> np.ndarray:
+        """Boolean [N] over LOGICAL ids carried by ``worker`` (static
+        ceil-block assignment — see :meth:`instance_mask`)."""
+        mask = np.zeros((n_instances,), bool)
+        per = -(-n_instances // self.n_workers)
+        mask[worker * per : (worker + 1) * per] = True
+        return mask
+
+    def worker_of(self, instance: int, n_instances: int) -> int:
+        per = -(-n_instances // self.n_workers)
+        return instance // per
+
+    @staticmethod
+    def random_model(
+        n_workers: int,
+        n_chunks: int,
+        fail_prob: float,
+        hang_prob: float = 0.0,
+        straggler_prob: float = 0.0,
+        poison_instances: tuple[int, ...] = (),
+        corrupt_ckpt_prob: float = 0.0,
+        corrupt_shard_prob: float = 0.0,
+        seed: int = 0,
+    ) -> "FaultModel":
+        """A seeded random chaos schedule over every fault channel."""
+        rng = np.random.default_rng(seed)
+        crashes: dict[int, list[int]] = {}
+        hangs: dict[int, list[int]] = {}
+        slows: dict[int, list[int]] = {}
+        bad_ckpt, bad_shard = set(), set()
+        for c in range(n_chunks):
+            for table, p in ((crashes, fail_prob), (hangs, hang_prob),
+                             (slows, straggler_prob)):
+                hit = [w for w in range(n_workers) if rng.random() < p]
+                if hit:
+                    table[c] = hit
+            if rng.random() < corrupt_ckpt_prob:
+                bad_ckpt.add(c)
+            if rng.random() < corrupt_shard_prob:
+                bad_shard.add(c)
+        return FaultModel(
+            n_workers, crashes, hangs=hangs, stragglers=slows,
+            poison_instances=tuple(poison_instances),
+            corrupt_ckpt=frozenset(bad_ckpt),
+            corrupt_shard=frozenset(bad_shard),
+        )
+
+
 def revert_instances(
     state: SweepState, snapshot: SweepState, mask: np.ndarray
 ) -> SweepState:
@@ -147,9 +252,14 @@ def run_with_failures(
         if writer is not None:
             writer.finish_drain(handle)
 
-    for c in range(max_chunks):
+    for _ in range(max_chunks):
         if bool(jax.device_get(jnp.all(state.done))):
             break
+        # index the fault plan by the ABSOLUTE chunk counter, not the loop
+        # iteration: a resumed run restarts the loop at 0 but the schedule
+        # addresses chunks since sweep start, so kill/resume parity for
+        # faulted sweeps requires the restored counter (tests/test_fault.py)
+        c = int(jax.device_get(state.chunk))
         snapshot = state
         state = runner.run_chunk(state)
         chunks_run += 1

@@ -184,6 +184,7 @@ def _partition_live(
     *,
     grouped: bool,
     compaction: bool,
+    hold: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray, list[tuple[int, np.ndarray]]]:
     """Shared first stage of BOTH planners (single-device group plans and
     multi-device block plans — they must never diverge, the bit-for-bit
@@ -191,9 +192,19 @@ def _partition_live(
     compaction, everyone otherwise), the done-pool padding source, and the
     per-roster ``(roster, ids)`` groups (one ``-1`` group when not
     grouped).
+
+    ``hold`` (boolean [N]) excludes instances from the live set in EVERY
+    mode, compaction or not — the fleet supervisor's retry-backoff and
+    quarantine states (:mod:`repro.core.fleet`) ride on it, so a held
+    instance is never stepped regardless of dispatch/compaction/sharding.
+    Held instances are also never used as padding (padding must stay a
+    masked no-op; only *done* instances qualify).
     """
     n = done.size
-    live = np.flatnonzero(~done) if compaction else np.arange(n)
+    mask_live = ~done if compaction else np.ones(n, bool)
+    if hold is not None:
+        mask_live = mask_live & ~hold
+    live = np.flatnonzero(mask_live)
     pad_pool = np.flatnonzero(done)
     if grouped:
         rosters = np.unique(scenario_ids[live])
@@ -228,17 +239,21 @@ def plan_chunk(
     *,
     grouped: bool,
     compaction: bool,
+    hold: np.ndarray | None = None,
 ) -> list[GroupPlan]:
     """Build the host-side execution plan for one chunk.
 
     Unifies straggler compaction and scenario grouping: ``compaction``
     selects the live set (pending instances only vs. everyone), ``grouped``
-    splits the live set into one dense batch per roster entry. Returns an
-    empty plan when nothing is pending.
+    splits the live set into one dense batch per roster entry, ``hold``
+    masks instances out of the schedule entirely (retry backoff /
+    quarantine — see :func:`_partition_live`). Returns an empty plan when
+    nothing is pending.
     """
     n = done.size
     live, pad_pool, groups = _partition_live(
-        done, scenario_ids, grouped=grouped, compaction=compaction
+        done, scenario_ids, grouped=grouped, compaction=compaction,
+        hold=hold,
     )
     if live.size == 0:
         return []
@@ -285,6 +300,7 @@ def plan_chunk_blocks(
     *,
     grouped: bool,
     compaction: bool,
+    hold: np.ndarray | None = None,
 ) -> BlockPlan | None:
     """Pack one chunk's live instances into per-device-balanced blocks.
 
@@ -314,7 +330,8 @@ def plan_chunk_blocks(
     """
     n = done.size
     live, pad_pool, groups = _partition_live(
-        done, scenario_ids, grouped=grouped, compaction=compaction
+        done, scenario_ids, grouped=grouped, compaction=compaction,
+        hold=hold,
     )
     if live.size == 0:
         return None
@@ -615,29 +632,38 @@ class SweepRunner:
             )
         return done, sids
 
-    def plan_chunk(self, state: SweepState) -> list[GroupPlan]:
+    def plan_chunk(
+        self, state: SweepState, hold: np.ndarray | None = None
+    ) -> list[GroupPlan]:
         """The (single-device) chunk execution plan for the current bitmap."""
         cfg = self.cfg
         grouped = self.dispatch == "grouped"
-        if not cfg.compaction and not grouped:
+        no_hold = hold is None or not hold.any()
+        if not cfg.compaction and not grouped and no_hold:
             # full-width switch program: no repacking needed
             n = cfg.n_instances
             return [GroupPlan(roster=-1, take=np.arange(n), keep=n,
                               identity=True)]
         done, sids = self._host_bitmap(state)
         return plan_chunk(done, sids, self._n_workers(),
-                          grouped=grouped, compaction=cfg.compaction)
+                          grouped=grouped, compaction=cfg.compaction,
+                          hold=hold)
 
-    def plan_chunk_sharded(self, state: SweepState) -> BlockPlan | None:
+    def plan_chunk_sharded(
+        self, state: SweepState, hold: np.ndarray | None = None
+    ) -> BlockPlan | None:
         """The D>1 plan: per-device LPT blocks (:func:`plan_chunk_blocks`)."""
         done, sids = self._host_bitmap(state)
         return plan_chunk_blocks(
             done, sids, self.n_devices, self.workers_per_device,
             grouped=self.dispatch == "grouped",
             compaction=self.cfg.compaction,
+            hold=hold,
         )
 
-    def run_chunk(self, state: SweepState) -> SweepState:
+    def run_chunk(
+        self, state: SweepState, hold: np.ndarray | None = None
+    ) -> SweepState:
         """Advance every pending instance by one walltime slice.
 
         Dispatch is asynchronous: the returned state's arrays are futures
@@ -645,13 +671,20 @@ class SweepRunner:
         read them (``jax.device_get`` / ``block_until_ready``), which is
         what the pipelined run loop exploits to overlap host I/O with
         device compute (:func:`repro.core.fault.run_with_failures`).
+
+        ``hold`` (boolean [N]) keeps the masked instances off this chunk's
+        schedule — their state is untouched and the chunk counter still
+        advances, which is how the fleet supervisor implements retry
+        backoff and quarantine (:mod:`repro.core.fleet`). A chunk whose
+        live set is empty (everything done, quarantined or held) is a
+        counter-only no-op.
         """
         if self.n_devices > 1:
-            bp = self.plan_chunk_sharded(state)
+            bp = self.plan_chunk_sharded(state, hold)
             if bp is not None:
                 state = self._run_block(state, bp)
         else:
-            for plan in self.plan_chunk(state):
+            for plan in self.plan_chunk(state, hold):
                 state = self._run_group(state, plan)
         done = state.sim.t >= state.horizon
         return state._replace(done=done, chunk=state.chunk + 1)

@@ -42,6 +42,7 @@ from repro.core.aggregate import (
     metrics_to_columns,
     records_from_columns,
 )
+from repro.ckpt.io import fsync_file, fsync_dir
 from repro.core.record import valid_rows as _valid_rows
 from repro.core.scenarios import get_scenario
 from repro.core.sweep import SweepConfig, SweepState
@@ -98,18 +99,30 @@ class DatasetWriter:
         # The npz is the shard's commit point (_write_shard replaces it
         # LAST), so scanning shard_*.npz sees only complete shards; stale
         # temp files from a mid-write kill start with "." and can't match.
+        # A committed-looking shard that is truncated or corrupt (torn
+        # non-atomic filesystem, bit rot) is DETECTED here — its files are
+        # removed and its instances forgotten, so the resumed sweep drains
+        # them again instead of shipping a broken dataset.
         self._shards: list[dict[str, Any]] = []
         self._written: set[int] = set()
+        self.repaired: list[int] = []  # shard indices dropped as corrupt
         for path in sorted(glob.glob(os.path.join(root, "shard_*.npz"))):
             stem = os.path.basename(path)[len("shard_"):-len(".npz")]
             if not stem.isdigit():
                 continue  # not a committed shard of this layout
-            with np.load(path) as z:
-                ids = z["instance"].tolist()
+            ids = self._read_shard_ids(path)
+            if ids is None:
+                self._discard_shard_files(int(stem))
+                self.repaired.append(int(stem))
+                continue
             self._shards.append(self._shard_entry(int(stem), ids))
             self._written.update(ids)
         self._next_shard = (
-            max((s["index"] for s in self._shards), default=-1) + 1
+            max(
+                [s["index"] for s in self._shards] + self.repaired,
+                default=-1,
+            )
+            + 1
         )
         self._pending: dict[int, dict[str, Any]] = {}
         # ids gathered by a begin_drain whose finish_drain hasn't landed
@@ -117,6 +130,47 @@ class DatasetWriter:
         # instance twice (the no-duplicate-rows guarantee holds for any
         # look-ahead depth, not just the run loop's 1-chunk pipeline)
         self._inflight: set[int] = set()
+
+    def _read_shard_ids(self, path: str) -> list[int] | None:
+        """Instance ids of a shard npz, or None when the file is truncated
+        or otherwise unreadable (the corrupt-shard detection primitive)."""
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if "instance" not in z.files:
+                    return None
+                return [int(i) for i in z["instance"]]
+        except Exception:
+            return None
+
+    def _discard_shard_files(self, idx: int) -> None:
+        for p in _shard_paths(self.root, idx):
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+
+    def verify_shards(self) -> list[int]:
+        """Audit every committed shard against disk; drop the broken ones.
+
+        A shard whose npz no longer loads (truncated by a torn write, a
+        failing disk, or the chaos fault model) is deleted together with
+        its records jsonl, and its instances are removed from the
+        ``written`` set — the next :meth:`drain` re-persists them from
+        sweep state, which still holds every instance's trace. Returns the
+        repaired shard indices. The unattended-run supervisor calls this
+        after suspected-corruption events and before :meth:`finalize`, so
+        a manifest can never reference a shard that does not round-trip.
+        """
+        bad: list[int] = []
+        for entry in list(self._shards):
+            npz_path, _ = _shard_paths(self.root, entry["index"])
+            if self._read_shard_ids(npz_path) != entry["instances"]:
+                bad.append(entry["index"])
+                self._shards.remove(entry)
+                self._written.difference_update(entry["instances"])
+                self._discard_shard_files(entry["index"])
+        self.repaired.extend(bad)
+        return bad
 
     @staticmethod
     def _shard_entry(idx: int, ids: list[int]) -> dict[str, Any]:
@@ -255,11 +309,15 @@ class DatasetWriter:
             for logical_id, record in zip(ids, records):
                 record["instance"] = int(logical_id)  # logical, not row
                 f.write(json.dumps(record) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, jsonl_path)
 
         tmp = os.path.join(self.root, f".tmp_shard_{idx:05d}.npz")
         np.savez_compressed(tmp, **arrays)
+        fsync_file(tmp)
         os.replace(tmp, npz_path)
+        fsync_dir(self.root)
 
         self._shards.append(self._shard_entry(idx, ids))
         self._written.update(ids)
@@ -292,12 +350,16 @@ class DatasetWriter:
             "summary": summary,
             "fault_events": (fault_info or {}).get("failure_events", []),
             "fault_info": fault_info,
+            "repaired_shards": sorted(self.repaired),
         }
         path = os.path.join(self.root, MANIFEST)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        fsync_dir(self.root)
         return path
 
 

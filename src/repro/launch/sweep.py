@@ -47,14 +47,45 @@ old single monolithic records JSON (``--out`` still writes the summary
 digest):
 
 ``python -m repro.launch.sweep --scenario-mix all --dataset-dir /tmp/ds``
+
+Unattended-run supervision (the paper's §5.2 completion contract,
+``repro.core.fleet``): the loop is always the supervised one — failed
+instances are charged against a per-instance retry budget
+(``--max-retries``) with exponential re-queue backoff, poison instances
+are quarantined instead of thrashing the fleet, and every event lands in
+an append-only run journal (``--journal``, defaulting to
+``<ckpt-dir>/journal.jsonl``). ``--hang-prob`` and ``--poison`` extend
+the injected fault taxonomy beyond crashes; ``--chunk-deadline`` journals
+wall-clock overruns; ``--heartbeat-file`` makes the worker emit atomic
+liveness beacons for the process supervisor
+(``python -m repro.launch.controller``), which SIGKILLs and resumes a
+stalled worker:
+
+``python -m repro.launch.sweep --fail-prob 0.1 --max-retries 3 \\
+    --chunk-deadline 60 --ckpt-dir /tmp/sw``
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+
+def _write_heartbeat(path: str, chunk: int, done: float) -> None:
+    """Atomically publish a liveness beacon (tmp + rename, never torn).
+
+    The process controller (``repro.launch.controller``) polls this file's
+    payload; a stale ``time`` means the worker is hung and gets SIGKILLed.
+    """
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"chunk": chunk, "done": done, "time": time.time()}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _preparse_devices(argv: list[str]) -> int | None:
@@ -92,7 +123,13 @@ def main() -> None:
     # heavy imports AFTER the device-count flag is in place
     from repro.ckpt import CheckpointManager
     from repro.core.aggregate import aggregate_metrics, metrics_to_records
-    from repro.core.fault import FailureInjector, run_with_failures
+    from repro.core.fault import FaultModel
+    from repro.core.fleet import (
+        RetryPolicy,
+        RunJournal,
+        format_completion_table,
+        run_supervised,
+    )
     from repro.core.record import RecordConfig
     from repro.core.scenario import SimConfig
     from repro.core.scenarios import list_scenarios
@@ -125,7 +162,37 @@ def main() -> None:
                     help="neighborhood engine implementation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--vary-horizon", action="store_true")
-    ap.add_argument("--fail-prob", type=float, default=0.0)
+    ap.add_argument("--fail-prob", type=float, default=0.0,
+                    help="per-worker per-chunk probability of an injected "
+                         "crash (chunk progress lost, instances reverted "
+                         "and re-queued)")
+    ap.add_argument("--hang-prob", type=float, default=0.0,
+                    help="per-worker per-chunk probability of an injected "
+                         "hang (deadline timeout: same revert as a crash, "
+                         "distinct journal event)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-worker per-chunk probability of a journaled "
+                         "slow-but-successful chunk (results kept)")
+    ap.add_argument("--poison", default="",
+                    help="comma-separated logical instance ids that crash "
+                         "every chunk they run — exhausts the retry budget "
+                         "and exercises quarantine")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="per-instance retry budget: an instance failing "
+                         "more than this many times is quarantined "
+                         "(excluded from scheduling and from the eligible "
+                         "completion denominator)")
+    ap.add_argument("--chunk-deadline", type=float, default=None,
+                    help="wall-clock seconds per chunk before a 'deadline' "
+                         "event is journaled (hard hangs are killed by the "
+                         "controller's heartbeat timeout)")
+    ap.add_argument("--heartbeat-file", default=None,
+                    help="write an atomic {chunk, done, time} liveness "
+                         "beacon here after every committed chunk (the "
+                         "controller's hang detector)")
+    ap.add_argument("--journal", default=None,
+                    help="append-only jsonl run journal (default: "
+                         "<ckpt-dir>/journal.jsonl when --ckpt-dir is set)")
     ap.add_argument("--devices", type=int, default=None,
                     help="device-mesh size the instance axis is sharded "
                          "over (default: all visible devices); on CPU "
@@ -197,12 +264,27 @@ def main() -> None:
     runner = SweepRunner(cfg, mesh=mesh, workers_per_device=args.workers)
     n_devices = int(mesh.devices.size)
     n_workers = runner._n_workers()
-    injector = FailureInjector.random(
+    try:
+        poison = tuple(
+            int(p) for p in args.poison.split(",") if p.strip()
+        )
+    except ValueError:
+        ap.error("--poison takes comma-separated integer instance ids")
+    faults = FaultModel.random_model(
         n_workers=n_workers,
         n_chunks=max(args.steps // args.chunk_steps * 3, 8),
         fail_prob=args.fail_prob,
+        hang_prob=args.hang_prob,
+        straggler_prob=args.straggler_prob,
+        poison_instances=poison,
         seed=args.seed,
     )
+    policy = RetryPolicy(max_retries=args.max_retries)
+    journal_path = args.journal or (
+        os.path.join(args.ckpt_dir, "journal.jsonl")
+        if args.ckpt_dir else None
+    )
+    journal = RunJournal(journal_path) if journal_path else None
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     writer = (
         DatasetWriter(args.dataset_dir, cfg, shard_size=args.shard_size)
@@ -216,12 +298,16 @@ def main() -> None:
           f"| {n_devices} device(s) x {args.workers} worker(s) "
           f"| {'pipelined' if args.pipeline else 'synchronous'} I/O"
           + (f" | recording every {record_every} steps" if record else ""))
+    def on_progress(c: int, done: float) -> None:
+        print(f"[sweep] chunk {c}: {done*100:.1f}% complete")
+        if args.heartbeat_file:
+            _write_heartbeat(args.heartbeat_file, c, done)
+
     t0 = time.perf_counter()
-    state, info = run_with_failures(
-        runner, injector, ckpt=ckpt, writer=writer, pipeline=args.pipeline,
-        on_progress=lambda c, done: print(
-            f"[sweep] chunk {c}: {done*100:.1f}% complete"
-        ),
+    state, info = run_supervised(
+        runner, faults, policy=policy, ckpt=ckpt, writer=writer,
+        journal=journal, pipeline=args.pipeline,
+        chunk_deadline=args.chunk_deadline, on_progress=on_progress,
     )
     dt = time.perf_counter() - t0
     summary = aggregate_metrics(
@@ -229,9 +315,12 @@ def main() -> None:
         scenario_names=cfg.scenarios,
     )
     print(f"[sweep] done in {dt:.1f}s — completion "
-          f"{info['completion_rate']*100:.0f}%, "
+          f"{info['completion_rate']*100:.0f}% "
+          f"(eligible {info['eligible_completion_rate']*100:.0f}%), "
           f"{info['chunks_run']} chunks, "
-          f"{len(info['failure_events'])} failure events")
+          f"{len(info['failure_events'])} failure events, "
+          f"{len(info['quarantined'])} quarantined")
+    print(format_completion_table(info["report"]))
     print(f"[sweep] {json.dumps(summary, indent=1)}")
     if writer is not None:
         manifest = writer.finalize(summary=summary, fault_info=info)

@@ -82,3 +82,127 @@ def test_property_any_shape_dtype_roundtrips(tmp_path_factory, shape, dtype):
         np.asarray(x, dtype=np.float32),
     )
     assert out["x"].dtype == x.dtype
+
+
+# --------------------------------------------------------------------------
+# crash-atomic saves + integrity-validated restore (the unattended-run
+# durable-state contract, paper §5.2)
+# --------------------------------------------------------------------------
+
+import json
+import shutil
+
+from repro.ckpt import valid_steps, verify_checkpoint
+from repro.ckpt.io import MANIFEST, PAYLOAD
+
+
+def _step_dir(root, step):
+    return os.path.join(str(root), f"step_{step:09d}")
+
+
+def test_verify_checkpoint_detects_truncation_and_missing(tmp_path):
+    path = str(tmp_path / "c")
+    save_pytree(path, _tree(), meta={"step": 1})
+    assert verify_checkpoint(path)
+    # truncated payload: digest mismatch
+    payload = os.path.join(path, PAYLOAD)
+    with open(payload, "r+b") as f:
+        f.truncate(os.path.getsize(payload) // 2)
+    assert not verify_checkpoint(path)
+    # missing payload
+    os.remove(payload)
+    assert not verify_checkpoint(path)
+    # missing / unparseable manifest
+    assert not verify_checkpoint(str(tmp_path / "nope"))
+    os.makedirs(str(tmp_path / "torn"))
+    with open(os.path.join(str(tmp_path / "torn"), MANIFEST), "w") as f:
+        f.write('{"leaves": [')
+    assert not verify_checkpoint(str(tmp_path / "torn"))
+
+
+def test_restore_falls_back_past_corrupt_newest(tmp_path):
+    """A corrupted newest checkpoint costs one step, never the run: the
+    manager skips it (recording the skip) and restores the previous valid
+    step; has_checkpoint likewise refuses to count it."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    payload = os.path.join(_step_dir(tmp_path, 3), PAYLOAD)
+    with open(payload, "r+b") as f:
+        f.truncate(os.path.getsize(payload) // 2)
+
+    assert valid_steps(str(tmp_path)) == [1, 2]
+    assert mgr.has_checkpoint()
+    restored, meta = mgr.restore(like=_tree())
+    assert meta["step"] == 2
+    assert mgr.last_skipped == [3]
+    for a, b in zip(jax.tree.leaves(_tree(2)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_explicit_corrupt_step_is_strict(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    payload = os.path.join(_step_dir(tmp_path, 2), PAYLOAD)
+    with open(payload, "r+b") as f:
+        f.truncate(1)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(like=_tree(), step=2)
+    # the newest-valid walk still works
+    _, meta = mgr.restore(like=_tree())
+    assert meta["step"] == 1
+
+
+def test_all_checkpoints_corrupt_raises_listing_skips(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    for s in (1, 2):
+        mgr.save(s, _tree(s))
+        payload = os.path.join(_step_dir(tmp_path, s), PAYLOAD)
+        os.remove(payload)
+    assert not mgr.has_checkpoint()
+    with pytest.raises(FileNotFoundError) as e:
+        mgr.restore(like=_tree())
+    assert mgr.last_skipped == [2, 1]
+    assert "skipped corrupt steps" in str(e.value)
+
+
+def test_mid_save_kill_artifacts_are_invisible_and_gced(tmp_path):
+    """A staging dir left by a SIGKILLed writer is never mistaken for a
+    checkpoint and is swept by the next save's gc."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, _tree(1))
+    # fake a killed writer: stale staging dir with a full payload inside
+    stale = os.path.join(str(tmp_path), ".tmp-step_000000002-99999")
+    shutil.copytree(_step_dir(tmp_path, 1), stale)
+    assert latest_step(str(tmp_path)) == 1  # staging never counts
+    restored, meta = mgr.restore(like=_tree())
+    assert meta["step"] == 1
+    mgr.save(3, _tree(3))
+    assert not os.path.exists(stale)  # swept
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_save_overwrites_same_step_atomically(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(5, _tree(1))
+    mgr.save(5, _tree(2))
+    restored, meta = mgr.restore(like=_tree(), step=5)
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree.leaves(_tree(2)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_digestless_manifest_still_verifies(tmp_path):
+    """Pre-digest checkpoints (no payload_sha256 key) must keep restoring:
+    verification skips the digest check instead of rejecting them."""
+    path = str(tmp_path / "c")
+    save_pytree(path, _tree(), meta={"step": 1})
+    mpath = os.path.join(path, MANIFEST)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["payload_sha256"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    assert verify_checkpoint(path)
+    load_pytree(path, like=_tree())

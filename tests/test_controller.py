@@ -1,0 +1,159 @@
+"""Process controller: heartbeat supervision, SIGKILL/resume, chaos CI.
+
+Fast tests drive ``_supervise_once`` with cheap jax-free child processes;
+the end-to-end controller-over-real-sweep runs (multiple worker spawns,
+each paying jax startup) are marked slow and exercised by the chaos CI
+job.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.launch.controller import (
+    _append_journal,
+    _read_heartbeat,
+    _supervise_once,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return env
+
+
+def test_read_heartbeat_absent_and_torn(tmp_path):
+    path = str(tmp_path / "hb.json")
+    assert _read_heartbeat(path) is None
+    with open(path, "w") as f:
+        f.write('{"chunk": 3, "done"')  # torn write (non-atomic writer)
+    assert _read_heartbeat(path) is None
+    with open(path, "w") as f:
+        json.dump({"chunk": 3, "done": 0.5, "time": 1.0}, f)
+    assert _read_heartbeat(path)["chunk"] == 3
+
+
+def test_supervise_kills_hung_worker(tmp_path):
+    """A worker that never heartbeats is SIGKILLed once the timeout
+    elapses, and the miss is journaled."""
+    journal = str(tmp_path / "ctl.jsonl")
+    proc = subprocess.Popen([sys.executable, "-c", "import time; time.sleep(60)"])
+    t0 = time.monotonic()
+    rc, reason = _supervise_once(
+        proc, str(tmp_path / "hb.json"),
+        timeout=1.0, poll=0.05, chaos_left=0, chaos_min_chunks=1,
+        journal=journal,
+    )
+    assert reason == "hang"
+    assert rc != 0
+    assert time.monotonic() - t0 < 30
+    events = [json.loads(l) for l in open(journal)]
+    assert [e["kind"] for e in events] == ["heartbeat_miss"]
+    assert events[0]["source"] == "controller"
+
+
+def test_supervise_chaos_kill_after_progress(tmp_path):
+    """Chaos mode SIGKILLs the worker only after it has committed the
+    configured number of chunks since spawn."""
+    hb = str(tmp_path / "hb.json")
+    journal = str(tmp_path / "ctl.jsonl")
+    script = (
+        "import json, sys, time\n"
+        "for c in range(100):\n"
+        "    json.dump({'chunk': c, 'done': c/100, 'time': time.time()},"
+        " open(sys.argv[1], 'w'))\n"
+        "    time.sleep(0.05)\n"
+    )
+    proc = subprocess.Popen([sys.executable, "-c", script, hb])
+    rc, reason = _supervise_once(
+        proc, hb,
+        timeout=30.0, poll=0.05, chaos_left=1, chaos_min_chunks=3,
+        journal=journal,
+    )
+    assert reason == "chaos"
+    assert rc != 0
+    events = [json.loads(l) for l in open(journal)]
+    assert events[0]["kind"] == "worker_kill"
+    # chunk index 2 in the beacon = 3 committed chunks since spawn
+    assert events[0]["chunk"] >= 2
+
+
+def test_supervise_clean_exit(tmp_path):
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    rc, reason = _supervise_once(
+        proc, str(tmp_path / "hb.json"),
+        timeout=30.0, poll=0.05, chaos_left=0, chaos_min_chunks=1,
+        journal=str(tmp_path / "ctl.jsonl"),
+    )
+    assert (rc, reason) == (0, "exit")
+
+
+def test_append_journal_is_readable(tmp_path):
+    path = str(tmp_path / "sub" / "ctl.jsonl")
+    _append_journal(path, {"kind": "spawn", "attempt": 1})
+    _append_journal(path, {"kind": "complete"})
+    events = [json.loads(l) for l in open(path)]
+    assert [e["kind"] for e in events] == ["spawn", "complete"]
+
+
+def _run_controller(tmp_path, *extra, worker=()):
+    cmd = [
+        sys.executable, "-m", "repro.launch.controller",
+        "--ckpt-dir", str(tmp_path / "run"),
+        "--heartbeat-timeout", "300", "--poll", "0.2", *extra,
+        "--",
+        "--instances", "8", "--steps", "80", "--chunk-steps", "20",
+        "--scenario-mix", "highway_merge,lane_drop", "--no-pipeline",
+        *worker,
+    ]
+    return subprocess.run(
+        cmd, env=_env(), capture_output=True, text=True, timeout=900
+    )
+
+
+@pytest.mark.slow
+def test_controller_survives_two_sigkills_end_to_end(tmp_path):
+    """The §5.2 acceptance smoke: two real SIGKILLs mid-run, unattended
+    resume from the last valid checkpoint, 100 % completion reported."""
+    res = _run_controller(
+        tmp_path, "--chaos-kills", "2",
+        worker=("--fail-prob", "0.05", "--seed", "3"),
+    )
+    assert res.returncode == 0, res.stderr
+    ctl = [json.loads(l)
+           for l in open(tmp_path / "run" / "controller.jsonl")]
+    kinds = [e["kind"] for e in ctl]
+    assert kinds.count("worker_kill") == 2
+    assert kinds.count("spawn") == 3
+    assert ctl[-1]["kind"] == "complete"
+    assert ctl[-1]["eligible_completion_rate"] == 1.0
+    assert ctl[-1]["completion_rate"] == 1.0
+    # the worker's own journal shows the resumes
+    worker = [json.loads(l)
+              for l in open(tmp_path / "run" / "journal.jsonl")]
+    assert sum(1 for e in worker if e["kind"] == "resume") == 2
+
+
+@pytest.mark.slow
+def test_controller_poison_quarantine_gate_passes(tmp_path):
+    """A poison instance is quarantined and reported; eligible completion
+    stays 100 % so the gate passes, and the quarantine is visible in the
+    controller's output."""
+    res = _run_controller(
+        tmp_path, worker=("--poison", "3", "--max-retries", "2"),
+    )
+    assert res.returncode == 0, res.stderr
+    ctl = [json.loads(l)
+           for l in open(tmp_path / "run" / "controller.jsonl")]
+    assert ctl[-1]["kind"] == "complete"
+    assert ctl[-1]["quarantined"] == [3]
+    assert ctl[-1]["eligible_completion_rate"] == 1.0
+    assert ctl[-1]["completion_rate"] < 1.0
+    assert "quarantined [3]" in res.stdout

@@ -1,0 +1,443 @@
+"""Fleet supervision: retry budgets, quarantine, journal replay, chaos.
+
+The unattended-run half of the paper's §5.2 completion claim: the
+supervised loop must survive the full fault taxonomy (crashes, hangs,
+stragglers, poison instances, corrupted durable writes) and still bring
+every eligible instance to 100 % completion, bit-for-bit equal to a
+fault-free run.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from conftest import assert_states_equal
+from hypcompat import given, settings, st
+
+from repro.ckpt import CheckpointManager
+from repro.core import SimConfig
+from repro.core.fault import FailureInjector, FaultModel, run_with_failures
+from repro.core.fleet import (
+    FleetState,
+    RetryPolicy,
+    RunJournal,
+    completion_report,
+    format_completion_table,
+    run_supervised,
+)
+from repro.core.record import RecordConfig
+from repro.core.sweep import SweepConfig, SweepRunner
+from repro.data.shards import DatasetWriter, ShardedDataset
+
+SIM = SimConfig(n_slots=16)
+MIX = ("highway_merge", "lane_drop")
+
+
+def _cfg(**kw):
+    base = dict(
+        n_instances=8,
+        steps_per_instance=120,
+        chunk_steps=40,
+        sim=SIM,
+        seed=11,
+    )
+    base.update(kw)
+    return SweepConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# policy / journal / state units
+# --------------------------------------------------------------------------
+
+def test_retry_policy_backoff_exponential_and_capped():
+    pol = RetryPolicy(max_retries=3, backoff_base=1, backoff_factor=2.0,
+                      backoff_cap=5)
+    assert [pol.backoff_chunks(k) for k in (1, 2, 3, 4, 5)] == [1, 2, 4, 5, 5]
+
+
+def test_journal_append_read_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RunJournal(path)
+    j.append({"kind": "chunk", "chunk": 0})
+    j.append({"kind": "failure", "chunk": 1})
+    # simulate a kill mid-append: torn half line at the tail
+    with open(path, "a") as f:
+        f.write('{"kind": "chu')
+    events = RunJournal.read(path)
+    assert [e["kind"] for e in events] == ["chunk", "failure"]
+    assert all("time" in e for e in events)
+
+
+def test_fleet_state_replay_is_assignment(tmp_path):
+    events = [
+        {"kind": "failure", "chunk": 0, "retries": {"2": 1},
+         "hold_until": {"2": 3}},
+        {"kind": "failure", "chunk": 4, "retries": {"2": 2, "5": 1},
+         "hold_until": {"2": 7, "5": 6}},
+        {"kind": "quarantine", "chunk": 5, "instances": [5]},
+        {"kind": "chunk", "chunk": 5},
+    ]
+    fs = FleetState.replay(events, 8)
+    assert fs.retries.tolist() == [0, 0, 2, 0, 0, 1, 0, 0]
+    assert fs.hold_until.tolist() == [0, 0, 7, 0, 0, 6, 0, 0]
+    assert fs.quarantined.tolist() == [False] * 5 + [True] + [False] * 2
+    # held = quarantined OR inside the backoff window
+    assert fs.held(5).tolist() == [False, False, True, False, False,
+                                   True, False, False]
+    assert fs.held(7).tolist() == [False] * 5 + [True] + [False] * 2
+
+
+# --------------------------------------------------------------------------
+# supervised loop semantics
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_supervised_clean_run_matches_plain_run(pipeline):
+    clean = SweepRunner(_cfg()).run()
+    state, info = run_supervised(SweepRunner(_cfg()), pipeline=pipeline)
+    assert info["completion_rate"] == 1.0
+    assert info["eligible_completion_rate"] == 1.0
+    assert info["quarantined"] == []
+    assert_states_equal(clean, state)
+
+
+def test_supervised_crash_schedule_matches_fault_free(tmp_path):
+    """Crashes + backoff only change WHEN instances are stepped, never the
+    trajectory: the final state is bit-for-bit the fault-free one."""
+    clean = SweepRunner(_cfg()).run()
+    fm = FaultModel(4, {0: [1], 1: [0, 3], 3: [2]})
+    state, info = run_supervised(
+        SweepRunner(_cfg()), fm, RetryPolicy(max_retries=10),
+        journal=RunJournal(str(tmp_path / "j.jsonl")),
+    )
+    assert info["completion_rate"] == 1.0
+    assert len(info["failure_events"]) == 3
+    assert info["retries_total"] > 0
+    assert_states_equal(clean, state._replace(chunk=clean.chunk))
+
+
+def test_hang_reverts_like_crash_with_distinct_event(tmp_path):
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    fm = FaultModel(4, {}, hangs={0: [1], 2: [2]})
+    state, info = run_supervised(SweepRunner(_cfg()), fm, journal=jr)
+    assert info["completion_rate"] == 1.0
+    kinds = [(e["kind"], e.get("fault")) for e in RunJournal.read(jr.path)]
+    assert ("failure", "hang") in kinds
+    assert ("failure", "crash") not in kinds
+    clean = SweepRunner(_cfg()).run()
+    assert_states_equal(clean, state._replace(chunk=clean.chunk))
+
+
+def test_straggler_keeps_results_and_is_journaled(tmp_path):
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    fm = FaultModel(4, {}, stragglers={0: [1], 1: [3]})
+    clean = SweepRunner(_cfg()).run()
+    state, info = run_supervised(SweepRunner(_cfg()), fm, journal=jr)
+    # no revert: same chunk count as the fault-free run, results kept
+    assert info["chunks_run"] == int(jax.device_get(clean.chunk))
+    assert info["failure_events"] == []
+    assert_states_equal(clean, state)
+    evs = RunJournal.read(jr.path)
+    assert [e["chunk"] for e in evs if e["kind"] == "straggler"] == [0, 1]
+
+
+def test_poison_instance_quarantined_rest_completes(tmp_path):
+    """One poison instance degrades only itself: it is quarantined after
+    exhausting its retry budget, every other instance reaches 100 %."""
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    fm = FaultModel(4, {}, poison_instances=(5,))
+    pol = RetryPolicy(max_retries=2, backoff_base=1, backoff_cap=2)
+    state, info = run_supervised(
+        SweepRunner(_cfg()), fm, pol, journal=jr, max_chunks=80
+    )
+    assert info["quarantined"] == [5]
+    assert info["eligible_completion_rate"] == 1.0
+    assert info["completion_rate"] == 7 / 8
+    done = np.asarray(jax.device_get(state.done))
+    assert not done[5] and done[[i for i in range(8) if i != 5]].all()
+    # budget charged exactly: max_retries failures + the quarantining one
+    report = info["report"]["total"]
+    assert report["retries"] == 3
+    evs = RunJournal.read(jr.path)
+    assert any(e["kind"] == "quarantine" and e["instances"] == [5]
+               for e in evs)
+    # the survivors are bit-for-bit the fault-free trajectories
+    clean = SweepRunner(_cfg()).run()
+    mask = np.ones(8, bool)
+    mask[5] = False
+    for a, b in zip(jax.tree.leaves(jax.device_get(clean.metrics)),
+                    jax.tree.leaves(jax.device_get(state.metrics))):
+        np.testing.assert_array_equal(np.asarray(a)[mask],
+                                      np.asarray(b)[mask])
+
+
+def test_backoff_holds_failed_instances_out_of_schedule(tmp_path):
+    """After a failure the instance sits out backoff_chunks before being
+    re-queued — visible both in the journaled hold horizon and in the
+    total chunk count."""
+    fm = FaultModel(4, {0: [0]})  # worker 0 = instances 0-1, chunk 0
+    pol = RetryPolicy(max_retries=5, backoff_base=2, backoff_factor=1.0,
+                      backoff_cap=2)
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    state, info = run_supervised(
+        SweepRunner(_cfg()), fm, pol, journal=jr, max_chunks=30
+    )
+    assert info["completion_rate"] == 1.0
+    fail = [e for e in RunJournal.read(jr.path) if e["kind"] == "failure"]
+    assert len(fail) == 1
+    # failed at chunk 0, backoff 2 → eligible again at chunk 3
+    assert fail[0]["hold_until"] == {"0": 3, "1": 3}
+    # chunks: 0 (reverted) + 1,2 (others finish, 0-1 held) + 3,4,5
+    # (instances 0-1 redo their 3 chunks) = 6 total
+    assert info["chunks_run"] == 6
+
+
+def test_chunk_deadline_overrun_is_journaled_not_fatal(tmp_path):
+    """An in-flight jax chunk can't be preempted, so deadline overruns
+    degrade to journaled warnings and the run still completes."""
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    _, info = run_supervised(
+        SweepRunner(_cfg()), None, journal=jr,
+        chunk_deadline=0.0, max_chunks=30,
+    )
+    assert info["completion_rate"] == 1.0
+    deadlines = [e for e in RunJournal.read(jr.path)
+                 if e["kind"] == "deadline"]
+    assert len(deadlines) == info["chunks_run"]
+    assert all(e["elapsed"] > e["deadline"] for e in deadlines)
+
+
+def test_journal_replay_matches_final_fleet(tmp_path):
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    fm = FaultModel(4, {0: [1], 2: [1]}, poison_instances=(6,))
+    pol = RetryPolicy(max_retries=1, backoff_base=1)
+    state, info = run_supervised(
+        SweepRunner(_cfg()), fm, pol, journal=jr, max_chunks=60
+    )
+    fs = FleetState.replay(RunJournal.read(jr.path), 8)
+    assert np.flatnonzero(fs.quarantined).tolist() == info["quarantined"]
+    assert int(fs.retries.sum()) == info["retries_total"]
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_supervised_kill_resume_parity_under_faults(tmp_path, pipeline):
+    """Kill/resume parity for FAULTED sweeps: the fault schedule is keyed
+    by the absolute chunk counter, so an interrupted+resumed run replays
+    the exact failure history and ends bit-for-bit with the uninterrupted
+    one — journal replay restoring the fleet state across the kill."""
+    plan = {0: [1], 2: [0, 2], 4: [3]}
+    cfg_kw = dict(scenario_mix=MIX, vary_horizon=True, min_horizon_frac=0.4)
+    pol = RetryPolicy(max_retries=8, backoff_base=1)
+
+    full, info_full = run_supervised(
+        SweepRunner(_cfg(**cfg_kw)), FaultModel(4, dict(plan)), pol,
+        pipeline=pipeline,
+    )
+    assert info_full["completion_rate"] == 1.0
+
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    _, info_a = run_supervised(
+        SweepRunner(_cfg(**cfg_kw)), FaultModel(4, dict(plan)), pol,
+        ckpt=ck, journal=jr, max_chunks=2, pipeline=pipeline,
+    )
+    assert info_a["completion_rate"] < 1.0
+    resumed, info_b = run_supervised(
+        SweepRunner(_cfg(**cfg_kw)), FaultModel(4, dict(plan)), pol,
+        ckpt=ck, journal=jr, pipeline=pipeline,
+    )
+    assert info_b["completion_rate"] == 1.0
+    assert_states_equal(full, resumed)
+    kinds = [e["kind"] for e in RunJournal.read(jr.path)]
+    assert "resume" in kinds
+
+
+def test_run_with_failures_resume_uses_absolute_chunk(tmp_path):
+    """The legacy loop's satellite fix: after a kill/resume the injector
+    must be indexed by the restored chunk counter, not the loop index —
+    otherwise the resumed run would replay chunk-0 failures again."""
+    plan = {0: [1], 2: [0, 3], 3: [2]}
+    full, info_full = run_with_failures(
+        SweepRunner(_cfg()), FailureInjector(4, dict(plan))
+    )
+    assert info_full["completion_rate"] == 1.0
+
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+    run_with_failures(
+        SweepRunner(_cfg()), FailureInjector(4, dict(plan)),
+        ckpt=ck, max_chunks=2,
+    )
+    resumed, info = run_with_failures(
+        SweepRunner(_cfg()), FailureInjector(4, dict(plan)), ckpt=ck
+    )
+    assert info["completion_rate"] == 1.0
+    # chunk counter included: the resumed schedule replayed 1:1
+    assert_states_equal(full, resumed)
+
+
+# --------------------------------------------------------------------------
+# durable-state corruption recovery
+# --------------------------------------------------------------------------
+
+def test_corrupt_checkpoint_falls_back_on_resume(tmp_path):
+    """An injected checkpoint corruption after chunk 1 must cost at most
+    one chunk of progress: resume skips the damaged step, replays from the
+    previous valid one, and still ends bit-for-bit correct."""
+    fm = FaultModel(4, {}, corrupt_ckpt=frozenset({1}))
+    ck = CheckpointManager(str(tmp_path / "ck"), async_write=False)
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    run_supervised(SweepRunner(_cfg()), fm, ckpt=ck, journal=jr,
+                   max_chunks=2)
+    resumed, info = run_supervised(
+        SweepRunner(_cfg()), FaultModel(4, {}), ckpt=ck, journal=jr
+    )
+    assert info["completion_rate"] == 1.0
+    assert ck.last_skipped == [2]  # step 2 (after chunk 1) was damaged
+    clean = SweepRunner(_cfg()).run()
+    assert_states_equal(clean, resumed)
+    evs = RunJournal.read(jr.path)
+    assert any(e["kind"] == "resume" and e["skipped_ckpts"] == [2]
+               for e in evs)
+
+
+def _rec_cfg(**kw):
+    return _cfg(
+        steps_per_instance=80, chunk_steps=40, scenario_mix=MIX,
+        record=RecordConfig(record_every=10, k_slots=4), **kw
+    )
+
+
+def test_corrupt_shard_detected_and_rewritten(tmp_path):
+    """An injected shard truncation is caught by the per-chunk
+    verify_shards audit and the instances are re-drained — the final
+    dataset is complete and bit-for-bit equal to an undamaged run."""
+    cfg = _rec_cfg()
+    jr = RunJournal(str(tmp_path / "j.jsonl"))
+    wr = DatasetWriter(str(tmp_path / "ds"), cfg, shard_size=2)
+    fm = FaultModel(4, {}, corrupt_shard=frozenset({1}))
+    state, info = run_supervised(
+        SweepRunner(cfg), fm, writer=wr, journal=jr
+    )
+    assert info["completion_rate"] == 1.0
+    wr.finalize()
+    ds = ShardedDataset.load(str(tmp_path / "ds"))
+    assert ds.n_instances == 8
+    evs = RunJournal.read(jr.path)
+    assert any(e["kind"] == "corrupt_shard" for e in evs)
+    assert any(e["kind"] == "shard_repair" for e in evs)
+    assert ds.manifest["repaired_shards"] != []
+
+    # parity with an undamaged recording run
+    wr2 = DatasetWriter(str(tmp_path / "ds2"), cfg, shard_size=2)
+    run_supervised(SweepRunner(cfg), writer=wr2)
+    wr2.finalize()
+    ds2 = ShardedDataset.load(str(tmp_path / "ds2"))
+    for a, b in zip(ds.series()[1:], ds2.series()[1:]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_supervised_shard_parity_under_fault_storm(tmp_path):
+    """Recording + crashes + hangs + poison: the persisted dataset rows of
+    every non-quarantined instance match the fault-free dataset exactly."""
+    cfg = _rec_cfg(vary_horizon=True, min_horizon_frac=0.4)
+    clean_wr = DatasetWriter(str(tmp_path / "clean"), cfg, shard_size=4)
+    run_supervised(SweepRunner(cfg), writer=clean_wr)
+    clean_wr.finalize()
+
+    fm = FaultModel(4, {1: [0]}, hangs={2: [2]}, poison_instances=(7,),
+                    corrupt_shard=frozenset({3}))
+    wr = DatasetWriter(str(tmp_path / "faulted"), cfg, shard_size=4)
+    state, info = run_supervised(
+        SweepRunner(cfg), fm, RetryPolicy(max_retries=2, backoff_cap=2),
+        writer=wr, journal=RunJournal(str(tmp_path / "j.jsonl")),
+        max_chunks=80,
+    )
+    assert info["quarantined"] == [7]
+    assert info["eligible_completion_rate"] == 1.0
+    wr.finalize()
+
+    clean = ShardedDataset.load(str(tmp_path / "clean"))
+    faulted = ShardedDataset.load(str(tmp_path / "faulted"))
+    by_id = {}
+    for shard in clean.iter_shards():
+        for row, i in enumerate(shard["instance"]):
+            by_id[int(i)] = {k: v[row] for k, v in shard.items()}
+    seen = set()
+    for shard in faulted.iter_shards():
+        for row, i in enumerate(shard["instance"]):
+            seen.add(int(i))
+            for k, v in shard.items():
+                np.testing.assert_array_equal(v[row], by_id[int(i)][k])
+    assert seen == set(range(8)) - {7}
+
+
+# --------------------------------------------------------------------------
+# completion report (§5.2)
+# --------------------------------------------------------------------------
+
+def test_completion_report_and_table():
+    cfg = _cfg(scenario_mix=MIX)
+    state, info = run_supervised(SweepRunner(cfg))
+    report = completion_report(state, None, cfg.scenarios)
+    assert report["total"]["completion_rate"] == 1.0
+    assert {r["scenario"] for r in report["scenarios"]} == set(MIX)
+    assert all(r["instances"] == 4 for r in report["scenarios"])
+    table = format_completion_table(report)
+    assert "100.0%" in table and "| total |" in table
+    for name in MIX:
+        assert f"| {name} |" in table
+    assert json.dumps(info["report"])  # JSON-serializable end to end
+
+
+# --------------------------------------------------------------------------
+# hypothesis chaos schedules
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_random_chaos_schedule_completes(seed):
+    """Any random crash/hang schedule (back-to-back failures, failure on
+    the final chunk, whole-fleet kills included) still reaches 100 %
+    completion with the fault-free bits."""
+    fm = FaultModel.random_model(
+        n_workers=4, n_chunks=12, fail_prob=0.25, hang_prob=0.15,
+        straggler_prob=0.2, seed=seed,
+    )
+    state, info = run_supervised(
+        SweepRunner(_cfg()), fm, RetryPolicy(max_retries=50, backoff_cap=2),
+        max_chunks=120,
+    )
+    assert info["completion_rate"] == 1.0
+    clean = SweepRunner(_cfg()).run()
+    assert_states_equal(clean, state._replace(chunk=clean.chunk))
+
+
+@settings(max_examples=4, deadline=None)
+@given(kill_after=st.integers(1, 4), seed=st.integers(0, 1000))
+def test_property_chaos_plus_kill_resume_parity(tmp_path_factory, kill_after,
+                                                seed):
+    """Chaos schedule + a process kill at an arbitrary chunk: the resumed
+    run ends bit-for-bit with the uninterrupted chaos run — including a
+    failure landing on the very chunk the kill interrupts."""
+    tmp = tmp_path_factory.mktemp("fleet")
+    fm_args = dict(n_workers=4, n_chunks=10, fail_prob=0.3, hang_prob=0.1,
+                   seed=seed)
+    pol = RetryPolicy(max_retries=50, backoff_cap=1)
+    full, _ = run_supervised(
+        SweepRunner(_cfg()), FaultModel.random_model(**fm_args), pol,
+        max_chunks=120,
+    )
+    ck = CheckpointManager(str(tmp / "ck"), async_write=False)
+    jr = RunJournal(str(tmp / "j.jsonl"))
+    run_supervised(
+        SweepRunner(_cfg()), FaultModel.random_model(**fm_args), pol,
+        ckpt=ck, journal=jr, max_chunks=kill_after,
+    )
+    resumed, info = run_supervised(
+        SweepRunner(_cfg()), FaultModel.random_model(**fm_args), pol,
+        ckpt=ck, journal=jr, max_chunks=120,
+    )
+    assert info["completion_rate"] == 1.0
+    assert_states_equal(full, resumed)
